@@ -1,0 +1,58 @@
+"""Communication accounting: payload bytes per compressor (paper Fig 1b/1d
+x-axis) + dense-vs-ring collective bytes from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import compression as C
+
+DIM = 784 * 10
+
+
+def run(verbose: bool = False):
+    rows = []
+    f32 = DIM * 32
+    for name, comp in [
+        ("float32", None),
+        ("qinf-8bit", C.QInf(bits=8)),
+        ("qinf-4bit", C.QInf(bits=4)),
+        ("qinf-2bit", C.QInf(bits=2)),
+        ("qinf-1bit", C.QInf(bits=1)),
+        ("randk-10%", C.RandK(frac=0.1)),
+    ]:
+        bits = f32 if comp is None else comp.payload_bits((DIM,))
+        rows.append({"name": f"payload_{name}", "bits_per_iter": bits,
+                     "saving_vs_f32": round(f32 / bits, 2)})
+        if verbose:
+            print(f"  {name:12s} {bits:>9d} bits/iter  "
+                  f"({f32 / bits:5.1f}x saving)")
+
+    # dense vs ring gossip wire bytes from the dry-run JSONs (if present)
+    d = pathlib.Path("experiments/dryrun")
+    if d.exists():
+        for backend in ("dense", "ring"):
+            f = d / f"qwen3-1.7b__train_4k__1pod__{backend}.json"
+            if f.exists():
+                rec = json.loads(f.read_text())
+                if rec.get("status") == "ok":
+                    cb = rec["roofline"]["coll_bytes"]
+                    rows.append({"name": f"gossip_{backend}_qwen3_train4k",
+                                 "coll_gb_per_step": round(cb / 1e9, 3)})
+    return rows
+
+
+def validate(rows):
+    by = {r["name"]: r for r in rows}
+    checks = [("2bit payload saves >10x vs f32",
+               by["payload_qinf-2bit"]["saving_vs_f32"] > 10,
+               by["payload_qinf-2bit"]["saving_vs_f32"])]
+    if ("gossip_dense_qwen3_train4k" in by
+            and "gossip_ring_qwen3_train4k" in by):
+        dn = by["gossip_dense_qwen3_train4k"]["coll_gb_per_step"]
+        rg = by["gossip_ring_qwen3_train4k"]["coll_gb_per_step"]
+        checks.append(("ring backend moves fewer wire bytes than dense",
+                       rg < dn, (rg, dn)))
+    return checks

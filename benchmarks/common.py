@@ -1,0 +1,125 @@
+"""Shared machinery for the paper-figure benchmarks (§5 logistic regression).
+
+Paper setting: 8 machines on a ring (mixing weight 1/3), MNIST-like non-iid
+(label-sorted) data, m=15 mini-batches/node, lambda2=0.005 (+lambda1=0.005
+in the non-smooth case), 2-bit blockwise (256) inf-norm quantization,
+alpha=0.5 gamma=1.0 for (Prox-)LEAD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core import compression as C
+from repro.core import oracles, prox_lead
+from repro.core import prox as proxmod
+from repro.core import topology as T
+from repro.core.comm import DenseMixer
+from repro.data.synthetic import logreg_problem
+
+N_NODES = 8
+P_FEAT, N_CLASSES = 784, 10
+DIM = P_FEAT * N_CLASSES
+LAM2 = 0.005
+
+
+def flat_logreg(lam2=LAM2, **kw):
+    """FiniteSumProblem over flattened (p*C,) parameters."""
+    base = logreg_problem(lam2=lam2, n_nodes=N_NODES, n_per_node=150,
+                          n_batches=15, **kw)
+
+    def grad_flat(x, b):
+        return base.grad_batch(x.reshape(P_FEAT, N_CLASSES), b).reshape(-1)
+
+    def loss_flat(x, b):
+        return base.loss_batch(x.reshape(P_FEAT, N_CLASSES), b)
+
+    return oracles.FiniteSumProblem(grad_flat, base.data, base.n, base.m,
+                                    loss_flat)
+
+
+def solve_reference(problem, lam1: float = 0.0, iters: int = 40000,
+                    eta: float = 1.0):
+    """Exact X* via long centralized proximal gradient descent (jitted scan)."""
+    n = problem.n
+
+    def mean_grad(x):
+        return problem.full_grad(jnp.broadcast_to(x, (n, DIM))).mean(0)
+
+    def body(x, _):
+        z = x - eta * mean_grad(x)
+        x = jnp.sign(z) * jnp.maximum(jnp.abs(z) - eta * lam1, 0.0)
+        return x, ()
+
+    x0 = jnp.zeros((DIM,), jnp.float64)
+    xstar, _ = jax.lax.scan(body, x0, None, length=iters)
+    return np.asarray(xstar)
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    subopt: List[float]        # ||X - X*||_F^2 every log_every iters
+    iters: int
+    bits_per_iter: float       # per node per iteration (idealized accounting)
+    grad_evals_per_iter: float
+    wall_s: float
+
+    def row(self):
+        return {"name": self.name, "iters": self.iters,
+                "final_subopt": self.subopt[-1],
+                "bits_per_iter": self.bits_per_iter,
+                "grad_evals_per_iter": self.grad_evals_per_iter,
+                "wall_s": round(self.wall_s, 1),
+                "subopt": self.subopt}
+
+
+def _bits(compressor, oracle_name: str = "full") -> float:
+    if isinstance(compressor, C.Identity) or compressor is None:
+        return DIM * 32.0
+    return float(compressor.payload_bits((DIM,)))
+
+
+_GEVALS = {"full": 15.0, "sgd": 1.0, "lsvrg": 2.0 + 15.0 / 15.0, "saga": 1.0}
+
+
+def run_alg(name: str, alg, X0, xstar, num_steps: int, log_every: int = 25,
+            seed: int = 0, compressor=None, oracle_name: str = "full",
+            verbose: bool = False) -> RunResult:
+    Xs = jnp.broadcast_to(jnp.asarray(xstar), X0.shape)
+    key = jax.random.key(seed)
+    k0, key = jax.random.split(key)
+    state = alg.init(X0, k0)
+    step = jax.jit(alg.step)
+    sub = []
+    t0 = time.time()
+    for t in range(num_steps):
+        key, sk = jax.random.split(key)
+        state = step(state, sk)
+        if t % log_every == 0 or t == num_steps - 1:
+            sub.append(float(jnp.sum((state.X - Xs) ** 2)))
+    wall = time.time() - t0
+    if verbose:
+        print(f"  {name:28s} final subopt {sub[-1]:.3e}  ({wall:.1f}s)")
+    return RunResult(name, sub, num_steps, _bits(compressor, oracle_name),
+                     _GEVALS.get(oracle_name, 1.0), wall)
+
+
+def make_mixer():
+    return DenseMixer(T.ring(N_NODES).W)
+
+
+def q2():
+    return C.QInf(bits=2, block=256)
+
+
+def estimate_L(problem) -> float:
+    A = np.asarray(problem.data["A"])
+    sq = (A.reshape(-1, A.shape[-1]) ** 2).sum(1)
+    return 0.5 * float(sq.max()) + 2 * LAM2  # softmax hessian bound + reg

@@ -1,0 +1,89 @@
+"""Fig. 2 reproduction: NON-SMOOTH logistic regression (lambda1 = 0.005).
+
+Prox-LEAD (2bit) matches Prox-LEAD (32bit) and the uncompressed composite
+baselines (NIDS, PG-EXTRA/P2D2) per iteration, at ~14x fewer bits; the VR
+variants stay linear with compression + prox.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks import common as cm
+from repro.core import baselines as B
+from repro.core import compression as C
+from repro.core import oracles, prox_lead
+from repro.core import prox as proxmod
+
+LAM1 = 0.005
+
+
+def run(num_steps: int = 800, verbose: bool = False):
+    problem = cm.flat_logreg()
+    xstar = cm.solve_reference(problem, lam1=LAM1)
+    L = cm.estimate_L(problem)
+    eta = 1.0 / (2 * L)
+    mixer = cm.make_mixer()
+    prox = proxmod.L1(lam=LAM1)
+    X0 = jnp.zeros((cm.N_NODES, cm.DIM))
+    q = cm.q2()
+    results = []
+
+    def plead(compressor, oracle_name, tag=""):
+        orc = oracles.make_oracle(oracle_name, problem)
+        e = eta if oracle_name == "full" else 1.0 / (6 * L)
+        alg = prox_lead.ProxLEAD(
+            e, 0.5, 1.0 if isinstance(compressor, C.Identity) else 0.5,
+            compressor, prox, mixer, orc)
+        nm = (f"Prox-LEAD{tag} "
+              f"({'32bit' if isinstance(compressor, C.Identity) else '2bit'})")
+        return cm.run_alg(nm, alg, X0, xstar, num_steps,
+                          compressor=compressor, oracle_name=oracle_name,
+                          verbose=verbose)
+
+    results.append(cm.run_alg(
+        "Prox-DGD", B.ProxDGD(eta=eta, mixer=mixer, prox=prox,
+                              oracle=oracles.FullGradient(problem)),
+        X0, xstar, num_steps, verbose=verbose))
+    results.append(cm.run_alg(
+        "NIDS (32bit)",
+        B.NIDSIndependent(eta=eta, mixer=mixer, prox=prox,
+                          oracle=oracles.FullGradient(problem)),
+        X0, xstar, num_steps, verbose=verbose))
+    results.append(cm.run_alg(
+        "PG-EXTRA/P2D2 (32bit)",
+        B.PGExtra(eta=eta / 2, mixer=mixer, prox=prox,
+                  oracle=oracles.FullGradient(problem)),
+        X0, xstar, num_steps, verbose=verbose))
+    results.append(plead(C.Identity(), "full"))
+    results.append(plead(q, "full"))
+    for orc in ("sgd", "lsvrg", "saga"):
+        results.append(plead(C.Identity(), orc, tag="-" + orc.upper()))
+        results.append(plead(q, orc, tag="-" + orc.upper()))
+    return [r.row() for r in results]
+
+
+def validate(rows):
+    from benchmarks.fig1_smooth import _tail_ratio
+    by = {r["name"]: r for r in rows}
+    checks = []
+    r0 = by["Prox-LEAD (2bit)"]
+    checks.append(("Prox-LEAD(2bit) linear w/ prox (tail decay <0.5, <1e-4)",
+                   _tail_ratio(r0) < 0.5 and r0["final_subopt"] < 1e-4,
+                   (r0["final_subopt"], _tail_ratio(r0))))
+    ratio = (by["Prox-LEAD (2bit)"]["final_subopt"]
+             / max(by["Prox-LEAD (32bit)"]["final_subopt"], 1e-300))
+    checks.append(("compression almost free (ratio < 1e3)", ratio < 1e3,
+                   ratio))
+    checks.append(("NIDS (uncompressed) parity baseline also converging",
+                   _tail_ratio(by["NIDS (32bit)"]) < 0.5
+                   and by["NIDS (32bit)"]["final_subopt"] < 1e-4,
+                   by["NIDS (32bit)"]["final_subopt"]))
+    for v in ("LSVRG", "SAGA"):
+        r = by[f"Prox-LEAD-{v} (2bit)"]
+        checks.append((f"Prox-LEAD-{v}(2bit) linear to exact (tail <0.7)",
+                       _tail_ratio(r) < 0.7,
+                       (r["final_subopt"], _tail_ratio(r))))
+    saving = (by["Prox-LEAD (32bit)"]["bits_per_iter"]
+              / by["Prox-LEAD (2bit)"]["bits_per_iter"])
+    checks.append(("2bit payload saves >10x bits/iter", saving > 10, saving))
+    return checks

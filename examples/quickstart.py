@@ -1,0 +1,53 @@
+"""Quickstart: decentralized composite optimization with 2-bit compression.
+
+8 nodes on a ring solve a non-smooth (L1-regularized) logistic regression
+with Prox-LEAD + SAGA — linear convergence to the exact solution while
+communicating ~14x fewer bits than float32 gossip.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression, oracles, prox, prox_lead, topology
+from repro.core.comm import DenseMixer
+from repro.data.synthetic import logreg_problem
+
+N_NODES, P_FEAT, N_CLASSES = 8, 784, 10
+
+problem = logreg_problem(lam2=0.005, n_nodes=N_NODES, n_per_node=150,
+                         n_batches=15)
+# the algorithm is pytree-generic; work on flattened (p*C,) parameters
+flat_problem = oracles.FiniteSumProblem(
+    lambda x, b: problem.grad_batch(x.reshape(P_FEAT, N_CLASSES), b).reshape(-1),
+    problem.data, problem.n, problem.m)
+
+topo = topology.ring(N_NODES)            # paper setup: ring, weights 1/3
+mixer = DenseMixer(topo.W)
+
+alg = prox_lead.ProxLEAD(
+    eta=0.05, alpha=0.5, gamma=1.0,      # paper §5.1 defaults
+    compressor=compression.QInf(bits=2, block=256),
+    prox=prox.L1(lam=0.005),             # the shared non-smooth component
+    mixer=mixer,
+    oracle=oracles.SAGA(flat_problem),
+)
+
+X0 = jnp.zeros((N_NODES, P_FEAT * N_CLASSES))
+
+
+def objective(state, t):
+    Xr = state.X.reshape(N_NODES, P_FEAT, N_CLASSES)
+    f = problem.full_loss(Xr)
+    r = 0.005 * jnp.mean(jnp.sum(jnp.abs(Xr), axis=(1, 2)))
+    cons = jnp.sum((state.X - state.X.mean(0)) ** 2)
+    print(f"iter {t:5d}  f+r = {float(f + r):.6f}   consensus = {float(cons):.2e}")
+    return float(f + r)
+
+
+state, logs = alg.run(X0, key=0, num_steps=400, callback=objective,
+                      log_every=50)
+bits = alg.compressor.payload_bits((P_FEAT * N_CLASSES,))
+print(f"\npayload per node per iteration: {bits / 8 / 1024:.1f} KiB "
+      f"(float32 gossip would be {P_FEAT * N_CLASSES * 4 / 1024:.1f} KiB)")
+print("final objective:", objective(state, -1))

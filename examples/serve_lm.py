@@ -1,0 +1,10 @@
+"""Batched serving example: prefill + greedy decode on three different
+architecture families (dense GQA, SSM, hybrid) through one API.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_mod
+
+for arch in ["qwen3-1.7b", "rwkv6-7b", "recurrentgemma-9b"]:
+    serve_mod.main(["--arch", arch, "--batch", "2", "--prompt-len", "8",
+                    "--gen", "16", "--d-model", "128", "--layers", "2"])

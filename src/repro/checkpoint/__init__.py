@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import load_state, save_state  # noqa: F401

@@ -1,0 +1,16 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256; gated cross-attention image layers every 5th layer.
+[hf:meta-llama/Llama-3.2-11B-Vision scaled per assignment]
+
+The ViT/SigLIP vision encoder + projector is a STUB: input_specs() provides
+pre-projected patch embeddings (B, n_vision_tokens, d_model)."""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=28672, vocab=128256, rope_theta=500000.0,
+        cross_attn_every=5, n_vision_tokens=1601,
+        citation="hf:meta-llama/Llama-3.2-11B-Vision (90B config per assignment)")

@@ -1,0 +1,11 @@
+"""qwen2-7b [dense] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064; QKV biases.  [arXiv:2407.10671]"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-7b", family="dense",
+        n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+        d_ff=18944, vocab=152064, rope_theta=1e6, qkv_bias=True,
+        citation="arXiv:2407.10671")

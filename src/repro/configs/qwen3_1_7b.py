@@ -1,0 +1,12 @@
+"""qwen3-1.7b [dense] — 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936; qk_norm (RMSNorm on q/k heads), head_dim=128.
+[hf:Qwen/Qwen3-8B family card]"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-1.7b", family="dense",
+        n_layers=28, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+        d_ff=6144, vocab=151936, rope_theta=1e6, qk_norm=True,
+        citation="hf:Qwen/Qwen3-8B")

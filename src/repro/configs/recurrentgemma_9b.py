@@ -1,0 +1,14 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000; RG-LRU + local attention (window 2048), pattern 1 attn : 2
+recurrent.  [arXiv:2402.19427]"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b", family="hybrid",
+        n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+        d_ff=12288, vocab=256000, rope_theta=1e4,
+        block_pattern=("rec", "rec", "attn"), lru_width=4096,
+        conv_width=4, local_window=2048,
+        citation="arXiv:2402.19427")

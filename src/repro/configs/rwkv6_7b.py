@@ -1,0 +1,11 @@
+"""rwkv6-7b "Finch" [ssm] — 32L d_model=4096 (attention-free)
+d_ff=14336 vocab=65536; data-dependent decay.  [arXiv:2404.05892]"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b", family="ssm",
+        n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, head_dim=64,
+        d_ff=14336, vocab=65536, rwkv_head_size=64,
+        citation="arXiv:2404.05892")

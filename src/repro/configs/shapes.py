@@ -1,0 +1,86 @@
+"""The 4 assigned input shapes + abstract input specs per (arch, shape).
+
+Decode shapes lower ``serve_step`` (1 new token vs a pre-allocated KV cache
+of seq_len); ``long_500k`` runs only for sub-quadratic archs (SSM / hybrid /
+SWA) — pure full-attention archs are skipped (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None if the (arch, shape) pair runs; else a skip reason."""
+    if shape.name == "long_500k":
+        if cfg.family == "encdec":
+            return "whisper decoder is bounded by its 448-token grammar"
+        if not cfg.sub_quadratic:
+            return "pure full attention: 524k dense KV cache is not sub-quadratic serving"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape, n_nodes: int):
+    """Stacked per-node training batch: leading node dim (decentralized)."""
+    assert shape.global_batch % n_nodes == 0
+    Bl = shape.global_batch // n_nodes
+    T = shape.seq_len
+    specs = {"tokens": _sds((n_nodes, Bl, T), jnp.int32),
+             "labels": _sds((n_nodes, Bl, T), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["vision"] = _sds((n_nodes, Bl, cfg.n_vision_tokens, cfg.d_model),
+                               cfg.dtype)
+    if cfg.family == "encdec":
+        # total positions per example split between encoder frames and
+        # decoder tokens (frontend stub provides frame embeddings)
+        enc = T // 2
+        dec = T - enc
+        specs = {"frames": _sds((n_nodes, Bl, enc, cfg.d_model), cfg.dtype),
+                 "tokens": _sds((n_nodes, Bl, dec), jnp.int32),
+                 "labels": _sds((n_nodes, Bl, dec), jnp.int32)}
+    return specs
+
+
+def serve_input_specs(cfg: ModelConfig, shape: InputShape):
+    """Inference specs (no node dim): prefill batch or decode step + cache."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["vision"] = _sds((B, cfg.n_vision_tokens, cfg.d_model),
+                                   cfg.dtype)
+        if cfg.family == "encdec":
+            enc = min(S, 2 * cfg.max_source_positions)
+            specs = {"frames": _sds((B, enc, cfg.d_model), cfg.dtype),
+                     "tokens": _sds((B, S - enc), jnp.int32)}
+        return specs
+    assert shape.kind == "decode"
+    cache = init_cache(cfg, B, S, abstract=True)
+    return {"tokens": _sds((B, 1), jnp.int32),
+            "cache": cache,
+            "pos": _sds((), jnp.int32)}

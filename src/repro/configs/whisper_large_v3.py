@@ -1,0 +1,15 @@
+"""whisper-large-v3 [audio] — 32L enc + 32L dec, d_model=1280 20H (kv=20)
+d_ff=5120 vocab=51866; encoder-decoder with conv frontend STUBBED:
+input_specs() provides post-conv frame embeddings (B, frames, d_model).
+LayerNorm + GELU + learned decoder positions (no RoPE).  [arXiv:2212.04356]"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3", family="encdec",
+        n_layers=32, n_enc_layers=32, d_model=1280, n_heads=20,
+        n_kv_heads=20, head_dim=64, d_ff=5120, vocab=51866,
+        norm="layernorm", act="gelu",
+        max_source_positions=1500, max_target_positions=448,
+        citation="arXiv:2212.04356")

@@ -1,0 +1,221 @@
+"""Baseline decentralized algorithms the paper compares against (§5.1).
+
+All operate on stacked pytrees with a leading node dim via a DenseMixer, and
+share the SGO oracles, so the comparison isolates the *algorithm*:
+
+  * (Prox-)DGD      — Nedic-Ozdaglar / Yuan et al. 2016 (converges with bias)
+  * PG-EXTRA        — Shi et al. 2015b (composite, no compression)
+  * NIDS            — Li-Shi-Yan 2019; == Prox-LEAD(C=0, gamma=1) per §4.3,
+                      provided here as an independent implementation
+  * Choco-SGD       — Koloskova et al. 2019 (compressed gossip, smooth only)
+  * LessBit-style   — Kovalev et al. 2021a, Option B/C/D (compressed
+                      primal-dual, one gradient step per iteration)
+  * Centralized     — prox-SGD on the average gradient (reference)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import DenseMixer, Mixer
+from repro.core.compression import Compressor, Identity
+from repro.core.oracles import Oracle, OracleState
+from repro.core.prox import NoneProx, Prox
+
+tmap = jax.tree_util.tree_map
+
+
+class SimpleState(NamedTuple):
+    X: Any
+    aux: Any              # algorithm-specific pytree
+    oracle: OracleState
+    k: jax.Array
+
+
+@dataclasses.dataclass
+class Baseline:
+    eta: float
+    mixer: Mixer
+    oracle: Oracle
+    prox: Prox = dataclasses.field(default_factory=NoneProx)
+    name: str = "base"
+
+    def init(self, X0, key) -> SimpleState:
+        raise NotImplementedError
+
+    def step(self, state: SimpleState, key) -> SimpleState:
+        raise NotImplementedError
+
+    def run(self, X0, key, num_steps, callback=None, log_every: int = 0):
+        key = jax.random.key(key) if isinstance(key, int) else key
+        k0, key = jax.random.split(key)
+        state = self.init(X0, k0)
+        step = jax.jit(self.step)
+        logs = []
+        for t in range(num_steps):
+            key, sub = jax.random.split(key)
+            state = step(state, sub)
+            if callback is not None and log_every and t % log_every == 0:
+                logs.append(callback(state, t))
+        return state, logs
+
+
+@dataclasses.dataclass
+class ProxDGD(Baseline):
+    """x <- prox_{eta r}(W x - eta g).  Biased for constant eta."""
+    name: str = "dgd"
+
+    def init(self, X0, key):
+        return SimpleState(X0, jnp.int32(0), self.oracle.init(X0), jnp.int32(0))
+
+    def step(self, state, key):
+        G, ostate = self.oracle.sample(state.X, state.oracle, key)
+        WX = self.mixer(state.X)
+        X = self.prox.tree_call(
+            tmap(lambda wx, g: wx - self.eta * g, WX, G), self.eta)
+        return SimpleState(X, state.aux, ostate, state.k + 1)
+
+
+@dataclasses.dataclass
+class PGExtra(Baseline):
+    """PG-EXTRA (Shi et al. 2015b):
+        z^{k+1} = z^k + W x^k - (I+W)/2 x^{k-1} - eta (g^k - g^{k-1})
+        x^{k+1} = prox_{eta r}(z^{k+1})
+    aux = (z, x_prev, g_prev).  This is the P2D2-class composite baseline."""
+    name: str = "pg_extra"
+
+    def _half_mix(self, X):
+        # (I + W)/2 X
+        return tmap(lambda x, wx: 0.5 * (x + wx), X, self.mixer(X))
+
+    def init(self, X0, key):
+        ostate = self.oracle.init(X0)
+        G0, ostate = self.oracle.sample(X0, ostate, key)
+        Z1 = tmap(lambda wx, g: wx - self.eta * g, self.mixer(X0), G0)
+        X1 = self.prox.tree_call(Z1, self.eta)
+        return SimpleState(X1, (Z1, X0, G0), ostate, jnp.int32(1))
+
+    def step(self, state, key):
+        Z, Xprev, Gprev = state.aux
+        G, ostate = self.oracle.sample(state.X, state.oracle, key)
+        WX = self.mixer(state.X)
+        halfXprev = self._half_mix(Xprev)
+        Znew = tmap(lambda z, wx, hx, g, gp: z + wx - hx - self.eta * (g - gp),
+                    Z, WX, halfXprev, G, Gprev)
+        Xnew = self.prox.tree_call(Znew, self.eta)
+        return SimpleState(Xnew, (Znew, state.X, G), ostate, state.k + 1)
+
+
+@dataclasses.dataclass
+class NIDSIndependent(Baseline):
+    """NIDS, implemented directly from Li-Shi-Yan 2019 (composite form):
+        y^{k+1} = 2 x^k - x^{k-1} - eta (g^k - g^{k-1})
+        z^{k+1} = z^k - x^k + (I - (I-W)/2) y^{k+1}
+        x^{k+1} = prox_{eta r}(z^{k+1})
+    aux = (z, x_prev, g_prev)."""
+    name: str = "nids"
+
+    def _tilde_mix(self, Y):
+        # (I - (I - W)/2) Y = (I + W)/2 Y
+        return tmap(lambda y, wy: 0.5 * (y + wy), Y, self.mixer(Y))
+
+    def init(self, X0, key):
+        ostate = self.oracle.init(X0)
+        G0, ostate = self.oracle.sample(X0, ostate, key)
+        Z1 = tmap(lambda x, g: x - self.eta * g, X0, G0)
+        X1 = self.prox.tree_call(Z1, self.eta)
+        return SimpleState(X1, (Z1, X0, G0), ostate, jnp.int32(1))
+
+    def step(self, state, key):
+        Z, Xprev, Gprev = state.aux
+        G, ostate = self.oracle.sample(state.X, state.oracle, key)
+        Y = tmap(lambda x, xp, g, gp: 2 * x - xp - self.eta * (g - gp),
+                 state.X, Xprev, G, Gprev)
+        Znew = tmap(lambda z, x, my: z - x + my, Z, state.X, self._tilde_mix(Y))
+        Xnew = self.prox.tree_call(Znew, self.eta)
+        return SimpleState(Xnew, (Znew, state.X, G), ostate, state.k + 1)
+
+
+@dataclasses.dataclass
+class ChocoSGD(Baseline):
+    """Choco-SGD (Koloskova et al. 2019).  Smooth problems only.
+
+        x+ = x - eta g
+        q  = Q(x+ - xhat);  xhat <- xhat + q
+        x  = x+ + gamma_c (W - I) xhat
+    aux = xhat."""
+    compressor: Compressor = dataclasses.field(default_factory=Identity)
+    gamma_c: float = 0.1
+    name: str = "choco"
+
+    def init(self, X0, key):
+        xhat = tmap(jnp.zeros_like, X0)
+        return SimpleState(X0, xhat, self.oracle.init(X0), jnp.int32(0))
+
+    def step(self, state, key):
+        k_g, k_c = jax.random.split(key)
+        G, ostate = self.oracle.sample(state.X, state.oracle, k_g)
+        Xp = tmap(lambda x, g: x - self.eta * g, state.X, G)
+        diff = tmap(lambda a, b: a - b, Xp, state.aux)
+        q = (diff if isinstance(self.compressor, Identity)
+             else self.compressor.tree_call(diff, k_c))
+        xhat = tmap(lambda h, qq: h + qq, state.aux, q)
+        Wxhat = self.mixer(xhat)
+        X = tmap(lambda xp, wxh, xh: xp + self.gamma_c * (wxh - xh),
+                 Xp, Wxhat, xhat)
+        return SimpleState(X, xhat, ostate, state.k + 1)
+
+
+@dataclasses.dataclass
+class LessBit(Baseline):
+    """LessBit-style compressed primal-dual (Kovalev et al. 2021a, Opt. B/C/D):
+
+        x^{k+1} = x^k - eta (g^k + d^k)
+        q = Q(x^{k+1} - h^k);  xhat = h^k + q;  h <- (1-alpha) h + alpha xhat
+        d^{k+1} = d^k + theta/2 (I - W) xhat
+    aux = (d, h).  Option is selected by the oracle (full->B, sgd->C,
+    lsvrg->D)."""
+    compressor: Compressor = dataclasses.field(default_factory=Identity)
+    theta: float = 0.2
+    alpha: float = 0.5
+    name: str = "lessbit"
+
+    def init(self, X0, key):
+        d = tmap(jnp.zeros_like, X0)
+        h = tmap(jnp.zeros_like, X0)
+        return SimpleState(X0, (d, h), self.oracle.init(X0), jnp.int32(0))
+
+    def step(self, state, key):
+        k_g, k_c = jax.random.split(key)
+        d, h = state.aux
+        G, ostate = self.oracle.sample(state.X, state.oracle, k_g)
+        X = tmap(lambda x, g, dd: x - self.eta * (g + dd), state.X, G, d)
+        diff = tmap(lambda a, b: a - b, X, h)
+        q = (diff if isinstance(self.compressor, Identity)
+             else self.compressor.tree_call(diff, k_c))
+        xhat = tmap(lambda hh, qq: hh + qq, h, q)
+        h = tmap(lambda hh, xh: (1 - self.alpha) * hh + self.alpha * xh, h, xhat)
+        lap = tmap(lambda xh, wxh: xh - wxh, xhat, self.mixer(xhat))  # (I-W) xhat
+        d = tmap(lambda dd, l: dd + self.theta / 2.0 * l, d, lap)
+        return SimpleState(X, (d, h), ostate, state.k + 1)
+
+
+@dataclasses.dataclass
+class Centralized(Baseline):
+    """Reference: prox-SGD on the exact average gradient (all-reduce)."""
+    name: str = "centralized"
+
+    def init(self, X0, key):
+        # start from the average of the initial points, replicated
+        Xbar = tmap(lambda x: jnp.broadcast_to(x.mean(0, keepdims=True), x.shape), X0)
+        return SimpleState(Xbar, jnp.int32(0), self.oracle.init(Xbar), jnp.int32(0))
+
+    def step(self, state, key):
+        G, ostate = self.oracle.sample(state.X, state.oracle, key)
+        Gbar = tmap(lambda g: jnp.broadcast_to(g.mean(0, keepdims=True), g.shape), G)
+        X = self.prox.tree_call(
+            tmap(lambda x, g: x - self.eta * g, state.X, Gbar), self.eta)
+        return SimpleState(X, state.aux, ostate, state.k + 1)

@@ -1,0 +1,223 @@
+"""Unbiased compression operators (paper Assumption 2).
+
+Every compressor Q satisfies  E[Q(x)] = x  and  E||Q(x) - x||^2 <= C ||x||^2
+for a computable constant C >= 0 (C = 0 -> identity).
+
+The workhorse is the paper's eq. (21): unbiased b-bit quantization with
+infinity-norm scaling, applied blockwise (block size 256, matching both the
+paper's setup and the TPU lane width).  ``compress`` returns a *payload* —
+the packed integer codes plus per-block scales — because the payload is what
+is actually communicated; ``decompress`` reconstructs the float estimate.
+
+The quantization hot path is implemented as a Pallas TPU kernel in
+``repro.kernels.quantize`` with a pure-jnp oracle in ``repro.kernels.ref``;
+this module dispatches to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+Payload = Any  # pytree of arrays
+
+
+class Compressor:
+    """Base API.  Stateless; randomness is threaded through PRNG keys."""
+
+    #: Assumption-2 variance constant (worst case over x).
+    C: float = 0.0
+    name: str = "base"
+
+    def compress(self, x: jax.Array, key: Optional[jax.Array]) -> Payload:
+        raise NotImplementedError
+
+    def decompress(self, payload: Payload, shape, dtype) -> jax.Array:
+        raise NotImplementedError
+
+    def __call__(self, x: jax.Array, key: Optional[jax.Array]) -> jax.Array:
+        """Q(x): compress-then-decompress (the mathematical operator)."""
+        return self.decompress(self.compress(x, key), x.shape, x.dtype)
+
+    def payload_bits(self, shape, dtype=jnp.float32) -> int:
+        """Exact number of wire bits for a tensor of ``shape``."""
+        raise NotImplementedError
+
+    def tree_compress(self, tree, key):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves)) if key is not None else [None] * len(leaves)
+        return treedef, [self.compress(l, k) for l, k in zip(leaves, keys)]
+
+    def tree_call(self, tree, key):
+        """Q applied leaf-wise to a pytree."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves)) if key is not None else [None] * len(leaves)
+        return jax.tree_util.tree_unflatten(
+            treedef, [self(l, k) for l, k in zip(leaves, keys)])
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    """C = 0; treated as the identity operator (paper, Assumption 2)."""
+    C: float = 0.0
+    name: str = "identity"
+
+    def compress(self, x, key):
+        return x
+
+    def decompress(self, payload, shape, dtype):
+        return payload
+
+    def __call__(self, x, key):
+        return x
+
+    def payload_bits(self, shape, dtype=jnp.float32):
+        n = int(np.prod(shape))
+        return n * jnp.dtype(dtype).itemsize * 8
+
+
+@dataclasses.dataclass(frozen=True)
+class QInf(Compressor):
+    """Paper eq. (21): unbiased b-bit quantization with inf-norm scaling.
+
+        Q_inf(x) = (||x||_inf 2^{-(b-1)} sign(x)) * floor(2^{b-1}|x| / ||x||_inf + u)
+
+    applied independently to contiguous blocks of ``block`` elements.  Only
+    sign+magnitude codes (b bits each) and one f32 scale per block go on the
+    wire.  Unbiased because u ~ U[0,1).
+
+    Variance constant (per Liu et al. 2021, App. C): for block size B,
+    E||Q(x)-x||^2 <= (sqrt(B) / 2^{b-1}) ||x||_2 * ||x||_inf-ish bound; we
+    expose the standard conservative bound C = B / 4^{b-1} / 4 ... in practice
+    we report the *empirical* C via ``empirical_C`` and use the paper's
+    default tuning (alpha=0.5, gamma=1.0) which is robust to C.
+    """
+    bits: int = 2
+    block: int = 256
+    use_pallas: bool = True
+    name: str = "qinf"
+
+    @property
+    def C(self) -> float:  # type: ignore[override]
+        # Worst case over a block: each element err <= scale = ||x||_inf/2^{b-1},
+        # and ||x||^2 >= ||x||_inf^2, so E||err||^2 <= B * ||x||_inf^2 / 4^{b-1}
+        # <= (B / 4^{b-1}) ||x||^2.   (Conservative; empirically far smaller.)
+        return float(self.block) / (4.0 ** (self.bits - 1))
+
+    def compress(self, x, key):
+        assert key is not None, "QInf is stochastic: pass a PRNG key"
+        # Last-dim blockwise form: rank-generic and sharding-preserving —
+        # never flattens a (node, layer, ...)-stacked tensor.  The Pallas
+        # kernel in repro.kernels.quantize is the TPU hot-path twin of this
+        # math (parity-tested); ``use_pallas`` routes 2D tiles through it.
+        if self.use_pallas and x.ndim == 2 and x.shape[-1] == self.block \
+                and x.shape[0] % 8 == 0:
+            u = jax.random.uniform(key, x.shape, jnp.float32)
+            from repro.kernels import quantize as qk
+            codes, scales = qk.qinf_quantize_blocks(
+                x.astype(jnp.float32), u, bits=self.bits, block=self.block,
+                interpret=jax.default_backend() != "tpu")
+            codes = codes[:, None, :]       # (R, nb=1, block)
+            scales = scales[:, None, :]
+        else:
+            codes, scales = kops.qinf_quantize_lastdim(
+                x, key, bits=self.bits, block=self.block)
+        return {"codes": codes, "scales": scales}
+
+    def decompress(self, payload, shape, dtype):
+        return kops.qinf_dequantize_lastdim(
+            payload["codes"], payload["scales"], shape, dtype,
+            block=self.block)
+
+    def payload_bits(self, shape, dtype=jnp.float32):
+        n = int(np.prod(shape))
+        nblocks = -(-n // self.block)
+        # b bits per element (sign+magnitude code) + one f32 scale per block.
+        return n * self.bits + nblocks * 32
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """Unbiased random-k sparsification: keep k of n coords, scale by n/k."""
+    frac: float = 0.1
+    name: str = "randk"
+
+    @property
+    def C(self) -> float:  # type: ignore[override]
+        return 1.0 / self.frac - 1.0
+
+    def compress(self, x, key):
+        n = x.size
+        k = max(1, int(round(self.frac * n)))
+        idx = jax.random.choice(key, n, shape=(k,), replace=False)
+        vals = x.reshape(-1)[idx] * (n / k)
+        return {"idx": idx, "vals": vals}
+
+    def decompress(self, payload, shape, dtype):
+        n = int(np.prod(shape))
+        flat = jnp.zeros((n,), dtype).at[payload["idx"]].set(
+            payload["vals"].astype(dtype))
+        return flat.reshape(shape)
+
+    def payload_bits(self, shape, dtype=jnp.float32):
+        n = int(np.prod(shape))
+        k = max(1, int(round(self.frac * n)))
+        return k * (32 + 32)  # value + index
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Biased top-k (NOT Assumption-2 compliant; included as an ablation
+    baseline — the paper's theory requires unbiasedness, and the framework
+    will refuse to use it inside Prox-LEAD unless ``allow_biased=True``)."""
+    frac: float = 0.1
+    name: str = "topk"
+
+    @property
+    def C(self) -> float:  # type: ignore[override]
+        return 1.0 - self.frac  # contraction constant, NOT Assumption 2's C
+
+    def compress(self, x, key):
+        n = x.size
+        k = max(1, int(round(self.frac * n)))
+        flat = x.reshape(-1)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return {"idx": idx, "vals": flat[idx]}
+
+    def decompress(self, payload, shape, dtype):
+        n = int(np.prod(shape))
+        flat = jnp.zeros((n,), dtype).at[payload["idx"]].set(
+            payload["vals"].astype(dtype))
+        return flat.reshape(shape)
+
+    def payload_bits(self, shape, dtype=jnp.float32):
+        n = int(np.prod(shape))
+        k = max(1, int(round(self.frac * n)))
+        return k * (32 + 32)
+
+
+_REGISTRY = {
+    "identity": lambda **kw: Identity(),
+    "qinf": lambda **kw: QInf(**kw),
+    "randk": lambda **kw: RandK(**kw),
+    "topk": lambda **kw: TopK(**kw),
+}
+
+
+def make_compressor(name: str, **kwargs) -> Compressor:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def empirical_C(comp: Compressor, x: jax.Array, key: jax.Array, trials: int = 64):
+    """Monte-Carlo estimate of E||Q(x)-x||^2 / ||x||^2 for a given x."""
+    keys = jax.random.split(key, trials)
+    errs = jnp.stack([jnp.sum((comp(x, k) - x) ** 2) for k in keys])
+    return float(jnp.mean(errs) / jnp.sum(x ** 2))

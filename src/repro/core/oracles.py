@@ -1,0 +1,177 @@
+"""Stochastic gradient oracles (paper Table 1): SGD, Loopless SVRG, SAGA.
+
+Finite-sum setting: node i holds m batches; f_i = (1/m) sum_j f_ij.  The
+problem supplies ``grad_batch(x_i, batch_ij) -> grad`` and the stacked data
+with leading dims (n, m, ...).  Oracles are vmapped over nodes and carry
+their reference-point state explicitly (pure functions, jit/scan friendly).
+
+Uniform sampling p_ij = 1/m throughout (paper's experimental setting), so
+
+  LSVRG:  g_i = grad f_il(x_i) - grad f_il(xt_i) + grad f_i(xt_i),
+          xt updated to x_i w.p. p (full grad recomputed lazily via stored avg)
+  SAGA :  g_i = grad f_il(x_i) - Gtab_il + mean_j Gtab_ij,  Gtab_il <- grad f_il(x_i)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FiniteSumProblem:
+    """n nodes x m local batches.
+
+    grad_batch: (params_leaf_pytree_for_one_node, one_batch) -> grad pytree
+    loss_batch: same signature, returns scalar (optional, for bookkeeping)
+    data: pytree with leading dims (n, m, ...)
+    """
+    grad_batch: Callable
+    data: Any
+    n: int
+    m: int
+    loss_batch: Optional[Callable] = None
+
+    # --- helpers ----------------------------------------------------------
+    def batch(self, i, l):
+        return jax.tree_util.tree_map(lambda d: d[i, l], self.data)
+
+    def node_data(self, i):
+        return jax.tree_util.tree_map(lambda d: d[i], self.data)
+
+    def full_grad(self, X):
+        """Deterministic grad for every node: (n, ...) stacked."""
+
+        def node_grad(x_i, data_i):
+            grads = jax.vmap(lambda b: self.grad_batch(x_i, b))(data_i)
+            return jax.tree_util.tree_map(lambda g: jnp.mean(g, 0), grads)
+
+        return jax.vmap(node_grad)(X, self.data)
+
+    def full_loss(self, X):
+        assert self.loss_batch is not None
+
+        def node_loss(x_i, data_i):
+            return jnp.mean(jax.vmap(lambda b: self.loss_batch(x_i, b))(data_i))
+
+        return jnp.mean(jax.vmap(node_loss)(X, self.data))
+
+
+class OracleState(NamedTuple):
+    kind: Any              # static marker (string held via closure, unused leaf)
+    ref: Any               # LSVRG: xt (n,...) ; SAGA: grad table (n,m,...)
+    ref_grad: Any          # LSVRG: full grad at xt (n,...) ; SAGA: table mean (n,...)
+
+
+class Oracle:
+    """Base: ``sample`` returns (G, new_state) with G stacked (n, ...)."""
+    name = "full"
+
+    def __init__(self, problem: FiniteSumProblem):
+        self.problem = problem
+
+    def init(self, X0) -> OracleState:
+        return OracleState(jnp.int32(0), jnp.int32(0), jnp.int32(0))
+
+    def sample(self, X, state: OracleState, key) -> tuple:
+        return self.problem.full_grad(X), state
+
+
+class FullGradient(Oracle):
+    name = "full"
+
+
+class SGD(Oracle):
+    """General stochastic setting: one uniformly sampled batch per node."""
+    name = "sgd"
+
+    def sample(self, X, state, key):
+        p = self.problem
+        ls = jax.random.randint(key, (p.n,), 0, p.m)
+
+        def node(x_i, data_i, l):
+            return p.grad_batch(x_i, jax.tree_util.tree_map(lambda d: d[l], data_i))
+
+        G = jax.vmap(node)(X, p.data, ls)
+        return G, state
+
+
+class LSVRG(Oracle):
+    """Loopless SVRG (Kovalev et al. 2020), per paper Table 1."""
+    name = "lsvrg"
+
+    def __init__(self, problem, prob_update: Optional[float] = None):
+        super().__init__(problem)
+        self.p_update = prob_update if prob_update is not None else 1.0 / problem.m
+
+    def init(self, X0):
+        ref = jax.tree_util.tree_map(jnp.copy, X0)
+        return OracleState(jnp.int32(1), ref, self.problem.full_grad(ref))
+
+    def sample(self, X, state, key):
+        p = self.problem
+        k_l, k_b = jax.random.split(key)
+        ls = jax.random.randint(k_l, (p.n,), 0, p.m)
+        omega = jax.random.bernoulli(k_b, self.p_update)
+
+        def node(x_i, xt_i, gref_i, data_i, l):
+            b = jax.tree_util.tree_map(lambda d: d[l], data_i)
+            g_new = p.grad_batch(x_i, b)
+            g_old = p.grad_batch(xt_i, b)
+            return jax.tree_util.tree_map(lambda a, b_, c: a - b_ + c,
+                                          g_new, g_old, gref_i)
+
+        G = jax.vmap(node)(X, state.ref, state.ref_grad, p.data, ls)
+        # reference update (full grad recomputed when omega == 1)
+        new_ref = jax.tree_util.tree_map(
+            lambda xt, x: jnp.where(omega, x, xt), state.ref, X)
+        new_ref_grad = jax.lax.cond(
+            omega, lambda r: p.full_grad(r), lambda r: state.ref_grad, new_ref)
+        return G, OracleState(state.kind, new_ref, new_ref_grad)
+
+
+class SAGA(Oracle):
+    """SAGA with per-batch stored gradients (paper Table 1).
+
+    ref      : gradient table (n, m, ...)
+    ref_grad : running table mean (n, ...)
+    """
+    name = "saga"
+
+    def init(self, X0):
+        p = self.problem
+
+        def node_table(x_i, data_i):
+            return jax.vmap(lambda b: p.grad_batch(x_i, b))(data_i)
+
+        tab = jax.vmap(node_table)(X0, p.data)
+        mean = jax.tree_util.tree_map(lambda t: jnp.mean(t, 1), tab)
+        return OracleState(jnp.int32(2), tab, mean)
+
+    def sample(self, X, state, key):
+        p = self.problem
+        ls = jax.random.randint(key, (p.n,), 0, p.m)
+
+        def node(x_i, tab_i, mean_i, data_i, l):
+            b = jax.tree_util.tree_map(lambda d: d[l], data_i)
+            g_new = p.grad_batch(x_i, b)
+            g_old = jax.tree_util.tree_map(lambda t: t[l], tab_i)
+            g = jax.tree_util.tree_map(lambda a, o, mn: a - o + mn,
+                                       g_new, g_old, mean_i)
+            new_tab = jax.tree_util.tree_map(
+                lambda t, gn: t.at[l].set(gn), tab_i, g_new)
+            new_mean = jax.tree_util.tree_map(
+                lambda mn, o, gn: mn + (gn - o) / p.m, mean_i, g_old, g_new)
+            return g, new_tab, new_mean
+
+        G, tab, mean = jax.vmap(node)(X, state.ref, state.ref_grad, p.data, ls)
+        return G, OracleState(state.kind, tab, mean)
+
+
+def make_oracle(name: str, problem: FiniteSumProblem, **kw) -> Oracle:
+    table = {"full": FullGradient, "sgd": SGD, "lsvrg": LSVRG, "saga": SAGA}
+    if name not in table:
+        raise ValueError(f"unknown oracle {name!r}")
+    return table[name](problem, **kw)

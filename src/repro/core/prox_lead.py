@@ -1,0 +1,144 @@
+"""Prox-LEAD (paper Algorithm 1) and LEAD (Algorithm 3, r = 0 special case).
+
+State lives in stacked form: every pytree leaf has a leading node dimension n
+(dense mixing backend).  The same step function is reused by the distributed
+trainer (repro.optim) where the node dim is sharded over mesh axes, and by a
+shard_map ring variant where leaves are local shards and the mixer ppermutes.
+
+    Z^{k+1} = X^k - eta G^k - eta D^k            (G^k from the SGO)
+    Zhat, Zhat_w, comm_state  = COMM(Z^{k+1}, H^k, Hw^k, alpha)
+    D^{k+1} = D^k + gamma/(2 eta) (Zhat - Zhat_w)
+    V^{k+1} = Z^{k+1} - gamma/2   (Zhat - Zhat_w)
+    X^{k+1} = prox_{eta R}(V^{k+1})
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import CommState, Mixer, comm, init_comm_state
+from repro.core.compression import Compressor, Identity
+from repro.core.oracles import Oracle, OracleState
+from repro.core.prox import NoneProx, Prox
+
+
+class ProxLEADState(NamedTuple):
+    X: Any                  # stacked params (n, ...)
+    D: Any                  # dual variable (n, ...)
+    comm: CommState         # H, Hw
+    oracle: OracleState
+    k: jax.Array            # iteration counter
+
+
+@dataclasses.dataclass
+class ProxLEAD:
+    """Algorithm 1.  ``eta``/``alpha``/``gamma`` may be floats or callables
+    k -> float for the diminishing-stepsize schedule of Theorem 7."""
+    eta: Any
+    alpha: Any
+    gamma: Any
+    compressor: Compressor
+    prox: Prox
+    mixer: Mixer
+    oracle: Oracle
+    allow_biased: bool = False
+
+    def __post_init__(self):
+        from repro.core.compression import TopK
+        if isinstance(self.compressor, TopK) and not self.allow_biased:
+            raise ValueError(
+                "TopK is biased and violates Assumption 2; the paper's theory "
+                "does not cover it. Pass allow_biased=True for ablations.")
+
+    # -- schedules ----------------------------------------------------------
+    def _eta(self, k):
+        return self.eta(k) if callable(self.eta) else self.eta
+
+    def _alpha(self, k):
+        return self.alpha(k) if callable(self.alpha) else self.alpha
+
+    def _gamma(self, k):
+        return self.gamma(k) if callable(self.gamma) else self.gamma
+
+    # -- algorithm ----------------------------------------------------------
+    def init(self, X0, key, H1: Optional[Any] = None) -> ProxLEADState:
+        """Lines 1-3: H_w^1 = W H^1;  Z^1 = X^0 - eta grad;  X^1 = prox(Z^1).
+
+        H^1 defaults to 0 (the paper's init)."""
+        if H1 is None:
+            H1 = jax.tree_util.tree_map(jnp.zeros_like, X0)
+        comm_state = init_comm_state(H1, self.mixer)
+        ostate = self.oracle.init(X0)
+        G0, ostate = self.oracle.sample(X0, ostate, key)
+        eta = self._eta(0)
+        Z1 = jax.tree_util.tree_map(lambda x, g: x - eta * g, X0, G0)
+        X1 = self.prox.tree_call(Z1, eta)
+        D1 = jax.tree_util.tree_map(jnp.zeros_like, X0)
+        return ProxLEADState(X1, D1, comm_state, ostate, jnp.int32(1))
+
+    def step(self, state: ProxLEADState, key) -> ProxLEADState:
+        k_g, k_c = jax.random.split(key)
+        G, ostate = self.oracle.sample(state.X, state.oracle, k_g)          # line 5
+        return self.update(state._replace(oracle=ostate), G, k_c)
+
+    def update(self, state: ProxLEADState, G, k_c) -> ProxLEADState:
+        """Lines 6-10 given an externally computed gradient estimate G
+        (used by the NN trainer, where G = grad of the vmapped loss)."""
+        eta = self._eta(state.k)
+        alpha = self._alpha(state.k)
+        gamma = self._gamma(state.k)
+        ostate = state.oracle
+        Z = jax.tree_util.tree_map(
+            lambda x, g, d: x - eta * g - eta * d, state.X, G, state.D)     # line 6
+        Zhat, Zhat_w, cstate = comm(
+            Z, state.comm, alpha, self.compressor, k_c, self.mixer)         # line 7
+        diff = jax.tree_util.tree_map(lambda a, b: a - b, Zhat, Zhat_w)
+        D = jax.tree_util.tree_map(
+            lambda d, df: d + gamma / (2 * eta) * df, state.D, diff)        # line 8
+        V = jax.tree_util.tree_map(
+            lambda z, df: z - gamma / 2.0 * df, Z, diff)                    # line 9
+        X = self.prox.tree_call(V, eta)                                     # line 10
+        return ProxLEADState(X, D, cstate, ostate, state.k + 1)
+
+    def run(self, X0, key, num_steps: int, callback=None, log_every: int = 0):
+        """Python-loop driver (used by benchmarks; jit-compiles step)."""
+        k0, key = jax.random.split(jax.random.key(key) if isinstance(key, int) else key)
+        state = self.init(X0, k0)
+        step = jax.jit(self.step)
+        logs = []
+        for t in range(num_steps):
+            key, sub = jax.random.split(key)
+            state = step(state, sub)
+            if callback is not None and log_every and (t % log_every == 0):
+                logs.append(callback(state, t))
+        return state, logs
+
+
+def lead(eta, alpha, gamma, compressor, mixer, oracle, **kw) -> ProxLEAD:
+    """LEAD (Algorithm 3) == Prox-LEAD with R = 0."""
+    return ProxLEAD(eta, alpha, gamma, compressor, NoneProx(), mixer, oracle, **kw)
+
+
+def nids(eta, mixer, oracle, prox: Optional[Prox] = None) -> ProxLEAD:
+    """NIDS (Li-Shi-Yan 2019) == (Prox-)LEAD with C = 0, gamma = 1 (paper §4.3,
+    Corollary 6 / the PUDA reduction)."""
+    return ProxLEAD(eta, 1.0, 1.0, Identity(), prox or NoneProx(), mixer, oracle)
+
+
+def diminishing_schedules(mu, L, C, lambda_max, kappa_f, kappa_g):
+    """Theorem 7 schedules: eta^k, alpha^k, gamma^k."""
+    B = 16.0 * (1 + C) ** 2 * kappa_g * kappa_f
+
+    def eta(k):
+        return (B / 2.0) / (k + B) / L
+
+    def alpha(k):
+        return eta(k) * mu / (1 + C)
+
+    def gamma(k):
+        return eta(k) * mu / (2 * (1 + C) ** 2 * lambda_max)
+
+    return eta, alpha, gamma

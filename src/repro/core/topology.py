@@ -1,0 +1,163 @@
+"""Communication topologies and mixing matrices (paper Assumption 1).
+
+A mixing matrix W is symmetric, W1 = 1, w_ij = 0 for non-edges, and
+-1 < lambda_n <= ... <= lambda_2 < lambda_1 = 1.  kappa_g is the network
+condition number  lambda_max(I-W) / lambda_min+(I-W).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    name: str
+    W: np.ndarray                 # (n, n) mixing matrix
+    neighbors: tuple              # tuple of tuples: j with w_ij != 0, j != i
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    # --- spectrum ---------------------------------------------------------
+    def eigvals_I_minus_W(self) -> np.ndarray:
+        return np.sort(np.linalg.eigvalsh(np.eye(self.n) - self.W))
+
+    @property
+    def lambda_max(self) -> float:
+        """lambda_max(I - W)."""
+        return float(self.eigvals_I_minus_W()[-1])
+
+    @property
+    def lambda_min_pos(self) -> float:
+        """Smallest nonzero eigenvalue of I - W."""
+        ev = self.eigvals_I_minus_W()
+        pos = ev[ev > 1e-10]
+        if pos.size == 0:
+            raise ValueError("graph appears disconnected or W == I")
+        return float(pos[0])
+
+    @property
+    def kappa_g(self) -> float:
+        return self.lambda_max / self.lambda_min_pos
+
+    def validate(self) -> None:
+        """Check Assumption 1; raises on violation."""
+        W = self.W
+        n = self.n
+        if not np.allclose(W, W.T, atol=1e-12):
+            raise ValueError("W not symmetric")
+        if not np.allclose(W @ np.ones(n), np.ones(n), atol=1e-10):
+            raise ValueError("W 1 != 1")
+        ev = np.sort(np.linalg.eigvalsh(W))
+        if ev[0] <= -1 + 1e-12:
+            raise ValueError(f"lambda_n(W) = {ev[0]} <= -1")
+        if n > 1 and ev[-2] >= 1 - 1e-10:
+            raise ValueError("lambda_2(W) >= 1: graph disconnected")
+
+
+def _neighbors_from_W(W: np.ndarray) -> tuple:
+    n = W.shape[0]
+    return tuple(tuple(int(j) for j in range(n) if j != i and abs(W[i, j]) > 1e-12)
+                 for i in range(n))
+
+
+def ring(n: int, self_weight: Optional[float] = None) -> Topology:
+    """Ring with uniform weights.  Paper setup: n=8, weights 1/3."""
+    if n == 1:
+        return Topology("ring", np.ones((1, 1)), ((),))
+    if n == 2:
+        W = np.array([[0.5, 0.5], [0.5, 0.5]])
+        return Topology("ring", W, _neighbors_from_W(W))
+    w = (1.0 - self_weight) / 2.0 if self_weight is not None else 1.0 / 3.0
+    sw = self_weight if self_weight is not None else 1.0 / 3.0
+    W = np.zeros((n, n))
+    for i in range(n):
+        W[i, i] = sw
+        W[i, (i + 1) % n] = w
+        W[i, (i - 1) % n] = w
+    return Topology("ring", W, _neighbors_from_W(W))
+
+
+def fully_connected(n: int) -> Topology:
+    W = np.full((n, n), 1.0 / n)
+    return Topology("fully_connected", W, _neighbors_from_W(W))
+
+
+def star(n: int) -> Topology:
+    """Metropolis-Hastings weights on a star graph."""
+    W = np.zeros((n, n))
+    for leaf in range(1, n):
+        w = 1.0 / n
+        W[0, leaf] = W[leaf, 0] = w
+        W[leaf, leaf] = 1.0 - w
+    W[0, 0] = 1.0 - (n - 1) / n
+    return Topology("star", W, _neighbors_from_W(W))
+
+
+def torus2d(rows: int, cols: int) -> Topology:
+    """2-D torus, Metropolis weights (degree 4 for rows,cols > 2)."""
+    n = rows * cols
+    A = np.zeros((n, n))
+
+    def idx(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = idx(r, c)
+            for j in {idx(r + 1, c), idx(r - 1, c), idx(r, c + 1), idx(r, c - 1)}:
+                if j != i:
+                    A[i, j] = 1.0
+    deg = A.sum(1)
+    W = np.zeros_like(A)
+    for i in range(n):
+        for j in range(n):
+            if A[i, j]:
+                W[i, j] = 1.0 / (1 + max(deg[i], deg[j]))
+        W[i, i] = 1.0 - W[i].sum()
+    return Topology("torus2d", W, _neighbors_from_W(W))
+
+
+def expander(n: int, degree: int = 4, seed: int = 0) -> Topology:
+    """Random regular-ish expander with Metropolis weights (deterministic)."""
+    rng = np.random.default_rng(seed)
+    A = np.zeros((n, n))
+    # circulant base: connect i -> i + 2^k mod n (hypercube-like shifts)
+    shifts = [1]
+    s = 2
+    while len(shifts) < max(2, degree // 2) and s < n:
+        shifts.append(s)
+        s *= 2
+    for i in range(n):
+        for sh in shifts:
+            j = (i + sh) % n
+            A[i, j] = A[j, i] = 1.0
+    deg = A.sum(1)
+    W = np.zeros_like(A)
+    for i in range(n):
+        for j in range(n):
+            if A[i, j]:
+                W[i, j] = 1.0 / (1 + max(deg[i], deg[j]))
+        W[i, i] = 1.0 - W[i].sum()
+    del rng
+    return Topology("expander", W, _neighbors_from_W(W))
+
+
+def make_topology(name: str, n: int, **kw) -> Topology:
+    if name == "ring":
+        return ring(n, **kw)
+    if name == "fully_connected":
+        return fully_connected(n)
+    if name == "star":
+        return star(n)
+    if name == "torus2d":
+        rows = kw.pop("rows", int(np.sqrt(n)))
+        assert n % rows == 0
+        return torus2d(rows, n // rows)
+    if name == "expander":
+        return expander(n, **kw)
+    raise ValueError(f"unknown topology {name!r}")

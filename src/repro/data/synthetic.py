@@ -1,0 +1,105 @@
+"""Deterministic synthetic data (the container is offline).
+
+* token streams: a Zipf-distributed Markov-ish LM stream with learnable
+  bigram structure (so small models show decreasing loss), deterministic in
+  (seed, node, step) — no state needs checkpointing beyond the step counter.
+* logistic-regression data: the paper's experimental setup — MNIST-like
+  784-dim 10-class data distributed NON-IID (label-sorted) across nodes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+def token_batch(key, batch: int, seq_len: int, vocab: int,
+                structure: float = 0.7):
+    """Structured random tokens: next token = (prev * 31 + 7) % vocab with
+    prob ``structure`` (a learnable deterministic bigram), else uniform.
+    Returns (tokens, labels) with labels = next-token targets."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    first = jax.random.randint(k1, (batch, 1), 0, vocab)
+    noise = jax.random.randint(k2, (batch, seq_len), 0, vocab)
+    use_rule = jax.random.bernoulli(k3, structure, (batch, seq_len))
+
+    def step(prev, xs):
+        nz, ur = xs
+        nxt = jnp.where(ur, (prev * 31 + 7) % vocab, nz)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step, first[:, 0],
+                           (noise.T, use_rule.T))
+    toks = toks.T  # (B, T)
+    tokens = jnp.concatenate([first, toks[:, :-1]], axis=1)
+    labels = toks
+    return tokens, labels
+
+
+def node_stream_key(seed: int, node: int, step: int):
+    key = jax.random.key(seed)
+    key = jax.random.fold_in(key, node)
+    return jax.random.fold_in(key, step)
+
+
+# ---------------------------------------------------------------------------
+# Paper experiment: non-iid multinomial logistic regression (MNIST-like)
+# ---------------------------------------------------------------------------
+
+def make_logreg_data(n_nodes: int = 8, n_per_node: int = 750,
+                     n_features: int = 784, n_classes: int = 10,
+                     n_batches: int = 15, seed: int = 0,
+                     noniid: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    """Synthetic MNIST-like data: class-conditional Gaussians on a random
+    low-dim manifold, SORTED BY LABEL across nodes (the paper's heterogeneous
+    setting: each node sees only ~1-2 classes).
+
+    Returns A (n, m, bs, p) and one-hot Y (n, m, bs, C)."""
+    rng = np.random.default_rng(seed)
+    total = n_nodes * n_per_node
+    # class prototypes in a 32-dim latent space, lifted to 784
+    latent = 32
+    protos = rng.normal(size=(n_classes, latent)) * 2.0
+    lift = rng.normal(size=(latent, n_features)) / np.sqrt(latent)
+    labels = rng.integers(0, n_classes, size=total)
+    z = protos[labels] + rng.normal(size=(total, latent)) * 0.8
+    X = z @ lift + rng.normal(size=(total, n_features)) * 0.3
+    X = X / np.linalg.norm(X, axis=1, keepdims=True)  # row-normalized (L<=0.25+reg)
+
+    if noniid:
+        order = np.argsort(labels, kind="stable")    # label-sorted split
+    else:
+        order = rng.permutation(total)
+    X, labels = X[order], labels[order]
+
+    bs = n_per_node // n_batches
+    A = X.reshape(n_nodes, n_batches, bs, n_features)
+    Y = np.eye(n_classes)[labels].reshape(n_nodes, n_batches, bs, n_classes)
+    return A, Y
+
+
+def logreg_problem(lam2: float = 0.005, lam1: float = 0.0, **kw):
+    """FiniteSumProblem for the paper's (regularized) logistic regression.
+
+    f_ij(X) = CE(softmax(A_ij X), Y_ij) + lam2 ||X||^2   (X: (p, C))
+    The l1 term (non-smooth case) goes through the prox, NOT the gradient.
+    """
+    from repro.core.oracles import FiniteSumProblem
+    A, Y = make_logreg_data(**kw)
+    data = {"A": jnp.asarray(A), "Y": jnp.asarray(Y)}
+    n, m = A.shape[0], A.shape[1]
+
+    def loss_batch(X, batch):
+        logits = batch["A"] @ X                     # (bs, C)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.mean(jnp.sum(batch["Y"] * logp, axis=-1))
+        return ce + lam2 * jnp.sum(X ** 2)
+
+    grad_batch = jax.grad(loss_batch)
+    return FiniteSumProblem(grad_batch, data, n, m, loss_batch)

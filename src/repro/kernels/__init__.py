@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compression hot-spot the paper optimizes:
+# blockwise inf-norm b-bit quantization (paper eq. 21).
+#   quantize.py — pl.pallas_call kernels with explicit BlockSpec VMEM tiling
+#   ops.py      — jit'd public wrappers (padding, packing, dispatch)
+#   ref.py      — pure-jnp oracles the kernels are validated against
+from repro.kernels import ops, quantize, ref  # noqa: F401

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for blockwise inf-norm b-bit quantization (paper eq. 21).
+
+TPU adaptation (vs. the GPU warp-shuffle reduction the paper's codebase uses):
+the quantization block size (256) is laid out along the *lane* dimension so a
+row-max is a single VPU cross-lane reduction; rows of blocks are tiled 8-at-a
+-time along the sublane dimension, and each grid step streams one
+(ROWS_TILE, BLOCK) tile HBM->VMEM via BlockSpec.  Stochastic-rounding noise is
+a second streamed operand (precomputed with jax.random outside) so the kernel
+stays a pure function of its inputs — bit-for-bit testable against
+``repro.kernels.ref``.
+
+On this CPU container the kernels execute with ``interpret=True``; the
+BlockSpecs below are the TPU-target tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One quantization block per row; 256 matches the paper's block size and is a
+# multiple of the 128-lane VPU width.
+ROWS_TILE = 8  # sublane tile: f32 min tile is (8, 128)
+
+
+def _quantize_kernel(x_ref, u_ref, codes_ref, scales_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)           # (ROWS_TILE, BLOCK)
+    u = u_ref[...].astype(jnp.float32)
+    levels = jnp.float32(2 ** (bits - 1))
+    maxabs = jnp.max(jnp.abs(x), axis=-1, keepdims=True)   # (ROWS_TILE, 1)
+    safe = jnp.where(maxabs > 0, maxabs, jnp.float32(1.0))
+    mag = jnp.floor(levels * jnp.abs(x) / safe + u)
+    mag = jnp.minimum(mag, levels)
+    codes_ref[...] = (jnp.sign(x) * mag).astype(jnp.int8)
+    scales_ref[...] = (maxabs / levels).astype(jnp.float32)
+
+
+def _dequantize_kernel(codes_ref, scales_ref, out_ref, *, out_dtype):
+    c = codes_ref[...].astype(jnp.float32)
+    s = scales_ref[...].astype(jnp.float32)      # (ROWS_TILE, 1)
+    out_ref[...] = (c * s).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def qinf_quantize_blocks(xb: jax.Array, ub: jax.Array, *, bits: int,
+                         block: int = 256, interpret: bool = True):
+    """Quantize (R, block) rows -> (codes int8 (R, block), scales f32 (R, 1)).
+
+    R must be a multiple of ROWS_TILE (callers pad; see kernels.ops).
+    """
+    R, B = xb.shape
+    assert B == block, (xb.shape, block)
+    assert R % ROWS_TILE == 0, f"R={R} must be a multiple of {ROWS_TILE}"
+    grid = (R // ROWS_TILE,)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_TILE, block), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_TILE, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS_TILE, block), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, block), jnp.int8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, ub)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def qinf_dequantize_blocks(codes: jax.Array, scales: jax.Array, *,
+                           block: int = 256, out_dtype=jnp.float32,
+                           interpret: bool = True):
+    """Dequantize (R, block) int8 codes with (R, 1) scales -> (R, block)."""
+    R, B = codes.shape
+    assert B == block and R % ROWS_TILE == 0
+    grid = (R // ROWS_TILE,)
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_TILE, block), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_TILE, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, block), out_dtype),
+        interpret=interpret,
+    )(codes, scales)

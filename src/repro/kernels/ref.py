@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the kernels in this package.
+
+These are the ground truth the Pallas kernels are validated against
+(tests sweep shapes/dtypes/bits and assert_allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qinf_quantize_blocks_ref(xb: jnp.ndarray, ub: jnp.ndarray, bits: int):
+    """Quantize rows of ``xb`` (R, B): one quantization block per row.
+
+    Paper eq. (21) with inf-norm scaling:
+        code  = sign(x) * floor(2^{b-1} |x| / ||x||_inf + u)
+        scale = ||x||_inf / 2^{b-1}
+        Q(x)  = code * scale
+
+    Returns (codes int8 (R, B), scales f32 (R, 1)).  All-zero blocks give
+    scale 0 and codes 0.  ``ub`` is U[0,1) noise of the same shape.
+    """
+    xf = xb.astype(jnp.float32)
+    levels = jnp.float32(2 ** (bits - 1))
+    maxabs = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    safe = jnp.where(maxabs > 0, maxabs, jnp.float32(1.0))
+    mag = jnp.floor(levels * jnp.abs(xf) / safe + ub.astype(jnp.float32))
+    mag = jnp.minimum(mag, levels)  # guard u==1.0-eps edge
+    codes = (jnp.sign(xf) * mag).astype(jnp.int8)
+    scales = (maxabs / levels).astype(jnp.float32)
+    return codes, scales
+
+
+def qinf_dequantize_blocks_ref(codes: jnp.ndarray, scales: jnp.ndarray,
+                               out_dtype=jnp.float32):
+    """Inverse of :func:`qinf_quantize_blocks_ref`: codes (R,B) * scales (R,1)."""
+    return (codes.astype(jnp.float32) * scales.astype(jnp.float32)).astype(out_dtype)

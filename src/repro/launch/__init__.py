@@ -1,0 +1,5 @@
+# Launch layer: production meshes, the multi-pod dry-run, roofline
+# extraction, and runnable train/serve drivers.
+# NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+# dedicated process (tests use subprocesses).
+from repro.launch import mesh, roofline  # noqa: F401

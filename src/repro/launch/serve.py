@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill a prompt batch, then decode greedily.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer as TR
+
+
+def generate(cfg, params, prompt_tokens, gen_len: int, extras=None):
+    """Greedy decode.  prompt (B, Tp) -> (B, Tp + gen_len)."""
+    B, Tp = prompt_tokens.shape
+    S_max = Tp + gen_len
+    cache = TR.init_cache(cfg, B, S_max)
+    extras = extras or {}
+
+    # prefill: teacher-forced pass that also fills the cache
+    logits, cache, _ = TR.forward(cfg, params,
+                                  {"tokens": prompt_tokens, **extras},
+                                  mode="prefill", cache=cache)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    step = jax.jit(lambda p, c, t, pos: TR.decode_step(cfg, p, c, t, pos))
+    out = [next_tok]
+    for i in range(gen_len - 1):
+        pos = Tp + i
+        lg, cache = step(params, cache, next_tok[:, None], pos)
+        next_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        out.append(next_tok)
+    return jnp.concatenate([prompt_tokens, jnp.stack(out, axis=1)], axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch).reduced(n_layers=args.layers,
+                                         d_model=args.d_model)
+    params = TR.init_params(cfg, jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision"] = jax.random.normal(
+            jax.random.key(2), (args.batch, cfg.n_vision_tokens, cfg.d_model),
+            cfg.dtype)
+    if cfg.family == "encdec":
+        extras["frames"] = jax.random.normal(
+            jax.random.key(2), (args.batch, 8, cfg.d_model), cfg.dtype)
+    t0 = time.time()
+    out = generate(cfg, params, prompts, args.gen, extras)
+    dt = time.time() - t0
+    toks = args.batch * args.gen
+    print(f"arch={args.arch} generated {out.shape} in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s incl. compile)")
+    print("sample:", np.array2string(jax.device_get(out[0, :24]))
+          if (np := __import__("numpy")) else out[0, :24])
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models import layers, moe, rglru, rwkv6, sharding, transformer  # noqa: F401
+from repro.models.transformer import (ModelConfig, abstract_params,  # noqa: F401
+                                      decode_step, forward, init_cache,
+                                      init_params, loss_fn)

@@ -1,0 +1,68 @@
+"""Mixture-of-Experts layer: top-k router with capacity-based dispatch
+(+ optional always-on shared experts, DeepSeek-MoE style).
+
+Dispatch uses the standard one-hot capacity formulation (MaxText/Flaxformer
+style): tokens over capacity are dropped, router probabilities scale the
+combined output, and an auxiliary load-balance loss is returned.  Expert FF
+dims are tensor-parallel over the 'model' axis; the expert dim stays
+unsharded by default (expert-parallel is a perf-iteration variant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def moe_mlp(x, router_w, experts_gate, experts_up, experts_down, *,
+            top_k: int, capacity_factor: float = 1.25,
+            shared=None):
+    """x (B, T, D); experts_* (E, D, F) / (E, F, D); router_w (D, E).
+
+    Returns (out (B,T,D), aux_loss scalar)."""
+    B, T, D = x.shape
+    E = router_w.shape[-1]
+    logits = jnp.einsum("btd,de->bte", x.astype(F32), router_w.astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B,T,E)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # (B,T,k)
+    # normalize the selected gates (Mixtral renormalizes over top-k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    capacity = max(1, int(np.ceil(T * top_k / E * capacity_factor)))
+
+    # expert assignment (B, T, k, E) one-hot
+    assign = jax.nn.one_hot(gate_idx, E, dtype=F32)
+    # position of each (token, slot) within its expert's queue
+    pos_in_expert = (jnp.cumsum(assign.reshape(B, T * top_k, E), axis=1)
+                     .reshape(B, T, top_k, E) * assign) - assign
+    keep = pos_in_expert < capacity
+    assign = assign * keep
+
+    onehot_pos = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), capacity,
+                                dtype=F32) * assign[..., None]
+    # dispatch (B, T, E, C) / combine weights
+    dispatch = jnp.sum(onehot_pos, axis=2)                       # (B,T,E,C)
+    combine = jnp.sum(onehot_pos * gate_vals[..., None, None], axis=2)
+
+    xe = jnp.einsum("btd,btec->becd", x.astype(F32), dispatch)   # (B,E,C,D)
+    g = jnp.einsum("becd,edf->becf", xe, experts_gate.astype(F32))
+    u = jnp.einsum("becd,edf->becf", xe, experts_up.astype(F32))
+    ye = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                    experts_down.astype(F32))
+    out = jnp.einsum("becd,btec->btd", ye, combine).astype(x.dtype)
+
+    # load-balance auxiliary loss (Switch-style)
+    frac_tokens = jnp.mean(dispatch.sum(-1), axis=(0, 1))        # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    if shared is not None:
+        sg, su, sd = shared
+        gsh = jnp.einsum("btd,df->btf", x, sg.astype(x.dtype))
+        ush = jnp.einsum("btd,df->btf", x, su.astype(x.dtype))
+        out = out + jnp.einsum("btf,fd->btd", jax.nn.silu(gsh) * ush,
+                               sd.astype(x.dtype))
+    return out, aux

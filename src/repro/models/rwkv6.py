@@ -1,0 +1,191 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Time-mixing: per head a state S in R^{hd x hd} evolves as
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,      y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+with w_t = exp(-exp(w0 + lora_w(x_t))) — the data-dependent decay that
+distinguishes RWKV6 from RWKV4/5.  Token-shift ddlerp mixes x_t with x_{t-1}
+through a small fused LoRA before the r/k/v/w/g projections.
+Channel-mixing is the squared-ReLU FFN with its own token shift.
+
+State is O(B * H * hd^2) — constant in sequence length, which is why this
+arch runs the long_500k decode shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+F32 = jnp.float32
+TM_LORA = 64
+DECAY_LORA = 64
+
+
+def template(cfg) -> Dict[str, Any]:
+    from repro.models.transformer import ParamT
+    D, F, Ln = cfg.d_model, cfg.d_ff, cfg.n_layers
+    hd = cfg.rwkv_head_size
+    H = D // hd
+    Vp = cfg.padded_vocab
+    blk = {
+        "ln1": ParamT((Ln, D), "ones"), "ln1_b": ParamT((Ln, D), "zeros"),
+        "ln2": ParamT((Ln, D), "ones"), "ln2_b": ParamT((Ln, D), "zeros"),
+        # ddlerp mus + fused lora
+        "mu_x": ParamT((Ln, D), "zeros"),
+        "mu_rkvwg": ParamT((Ln, 5, D), "zeros"),
+        "tm_a1": ParamT((Ln, D, 5 * TM_LORA)),
+        "tm_a2": ParamT((Ln, 5, TM_LORA, D), fan=TM_LORA),
+        # data-dependent decay
+        "w0": ParamT((Ln, D), "zeros"),
+        "wd1": ParamT((Ln, D, DECAY_LORA)),
+        "wd2": ParamT((Ln, DECAY_LORA, D), fan=DECAY_LORA),
+        "u": ParamT((Ln, H, hd), "zeros"),
+        # projections
+        "rwkv_wr": ParamT((Ln, D, D)), "rwkv_wk": ParamT((Ln, D, D)),
+        "rwkv_wv": ParamT((Ln, D, D)), "rwkv_wg": ParamT((Ln, D, D)),
+        "rwkv_wo": ParamT((Ln, D, D)),
+        "lnx": ParamT((Ln, D), "ones"), "lnx_b": ParamT((Ln, D), "zeros"),
+        # channel mix
+        "cm_mu_k": ParamT((Ln, D), "zeros"), "cm_mu_r": ParamT((Ln, D), "zeros"),
+        "cm_wk": ParamT((Ln, D, F)), "cm_wv": ParamT((Ln, F, D), fan=F),
+        "cm_wr": ParamT((Ln, D, D)),
+    }
+    return {
+        "embed": ParamT((Vp, D), fan=D),
+        "embed_ln": ParamT((D,), "ones"), "embed_ln_b": ParamT((D,), "zeros"),
+        "final_norm": ParamT((D,), "ones"), "final_norm_b": ParamT((D,), "zeros"),
+        "lm_head": ParamT((D, Vp)),
+        "blocks": blk,
+    }
+
+
+def _token_shift(x, prev):
+    """x (B,T,D) -> x_{t-1} with ``prev`` (B,D) as x_{-1}."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """Fused ddlerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.einsum("btd,dk->btk", jnp.tanh(base.astype(F32)),
+                      p["tm_a1"].astype(F32))
+    lora = lora.reshape(*lora.shape[:-1], 5, TM_LORA)
+    mix = jnp.einsum("btsk,skd->sbtd", lora, p["tm_a2"].astype(F32))
+    mus = p["mu_rkvwg"].astype(F32)                       # (5, D)
+    xf, xxf = x.astype(F32), xx.astype(F32)
+    out = xf[None] + xxf[None] * (mus[:, None, None] + mix)
+    return out  # (5, B, T, D) float32: r,k,v,w,g order
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Recurrence over time.  r,k,v,w (B,T,H,hd) f32; u (H,hd);
+    state (B,H,hd,hd).  Returns (y (B,T,H,hd), final_state)."""
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs          # (B,H,hd)
+        a = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * a)
+        S = wt[..., None] * S + a
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def time_mix(cfg, p, x, shift_prev, wkv_state, pos=None):
+    """Returns (out (B,T,D), new_shift (B,D), new_wkv_state)."""
+    B, T, D = x.shape
+    hd = cfg.rwkv_head_size
+    H = D // hd
+    xn = L.layernorm(x, p["ln1"], p["ln1_b"])
+    prev = shift_prev if shift_prev is not None else jnp.zeros((B, D), xn.dtype)
+    xx = _token_shift(xn, prev) - xn
+    xr, xk, xv, xw, xg = _ddlerp(p, xn, xx)
+
+    r = jnp.einsum("btd,de->bte", xr, p["rwkv_wr"].astype(F32))
+    k = jnp.einsum("btd,de->bte", xk, p["rwkv_wk"].astype(F32))
+    v = jnp.einsum("btd,de->bte", xv, p["rwkv_wv"].astype(F32))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["rwkv_wg"].astype(F32)))
+    dec = jnp.einsum("btd,dk->btk", jnp.tanh(xw), p["wd1"].astype(F32))
+    dec = jnp.einsum("btk,kd->btd", dec, p["wd2"].astype(F32))
+    w = jnp.exp(-jnp.exp(p["w0"].astype(F32) + dec))      # (B,T,D) in (0,1)
+
+    shp = (B, T, H, hd)
+    y, new_state = _wkv_scan(r.reshape(shp), k.reshape(shp), v.reshape(shp),
+                             w.reshape(shp), p["u"].astype(F32),
+                             wkv_state.astype(F32))
+    y = y.reshape(B, T, D)
+    # per-head group norm
+    y = y.reshape(B, T, H, hd)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, T, D) * p["lnx"].astype(F32) + p["lnx_b"].astype(F32)
+    out = jnp.einsum("btd,de->bte", y * g, p["rwkv_wo"].astype(F32))
+    return out.astype(x.dtype), xn[:, -1], new_state.astype(cfg.dtype)
+
+
+def channel_mix(cfg, p, x, shift_prev):
+    B, T, D = x.shape
+    xn = L.layernorm(x, p["ln2"], p["ln2_b"])
+    prev = shift_prev if shift_prev is not None else jnp.zeros((B, D), xn.dtype)
+    xx = _token_shift(xn, prev) - xn
+    xk = xn + xx * p["cm_mu_k"].astype(xn.dtype)
+    xr = xn + xx * p["cm_mu_r"].astype(xn.dtype)
+    kk = jnp.einsum("btd,df->btf", xk, p["cm_wk"].astype(xn.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    kv = jnp.einsum("btf,fd->btd", kk, p["cm_wv"].astype(xn.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr,
+                                   p["cm_wr"].astype(xn.dtype)))
+    return rr * kv, xn[:, -1]
+
+
+def forward(cfg, params, batch, *, mode="train", cache=None, pos=None):
+    from repro.models.transformer import lm_logits
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    D = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = D // hd
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = L.layernorm(x, params["embed_ln"], params["embed_ln_b"])
+
+    def body(carry, xs):
+        h = carry
+        if cache is None:
+            p_l = xs
+            tm_prev = cm_prev = None
+            wkv = jnp.zeros((B, H, hd, hd), F32)
+        else:
+            p_l, c_l = xs
+            tm_prev, cm_prev, wkv = c_l["tm_shift"], c_l["cm_shift"], c_l["wkv"]
+        a, tm_new, wkv_new = time_mix(cfg, p_l, h, tm_prev, wkv, pos)
+        h = h + a
+        m, cm_new = channel_mix(cfg, p_l, h, cm_prev)
+        h = h + m
+        new_c = {"tm_shift": tm_new.astype(cfg.dtype),
+                 "cm_shift": cm_new.astype(cfg.dtype),
+                 "wkv": wkv_new}
+        return h, new_c
+
+    xs = params["blocks"] if cache is None else (params["blocks"], cache["blocks"])
+    x, new_blocks = jax.lax.scan(body, x, xs)
+    logits = lm_logits(cfg, params, x)
+    new_cache = None if cache is None else {"blocks": new_blocks}
+    return logits, new_cache, jnp.float32(0.0)
+
+
+def init_cache(cfg, B, mk):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = D // hd
+    Ln = cfg.n_layers
+    return {"blocks": {
+        "tm_shift": mk((Ln, B, D)),
+        "cm_shift": mk((Ln, B, D)),
+        "wkv": mk((Ln, B, H, hd, hd)),
+    }}

@@ -1,0 +1,2 @@
+from repro.optim.decentralized import (DecentralizedTrainer,  # noqa: F401
+                                       TrainerConfig)

@@ -1,0 +1,295 @@
+"""Prox-LEAD as the outer optimizer of decentralized NN training.
+
+State layout: every parameter leaf gains a leading node dim N — node i's
+replica.  The forward/backward is vmapped over N (GSPMD shards it over the
+node mesh axes); the Prox-LEAD update then gossips with compression.
+
+Two gossip backends:
+  dense — paper-faithful: W X as a tensordot over the node dim (GSPMD turns
+          it into all-gathers).  Works for any topology.
+  ring  — TPU-native (beyond-paper, §Perf): the COMM exchange runs inside
+          shard_map over the node axes, ppermuting the PACKED b-bit payload
+          (codes + scales) to the two ring neighbours.  Collective bytes on
+          the wire are the compressed payload, not dequantized floats.
+
+The first trainer step folds Algorithm 1's warm-up (lines 1-3) into the
+k=1 update with H^1 = 0, D^1 = 0 — identical fixed point, one less special
+case in the jitted step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import topology as topo_mod
+from repro.core.comm import CommState, DenseMixer, comm, init_comm_state
+from repro.core.compression import Compressor, Identity, QInf
+from repro.core.prox import NoneProx, Prox
+from repro.core.prox_lead import ProxLEAD, ProxLEADState
+from repro.core.oracles import OracleState
+from repro.kernels import ops as kops
+from repro.models import transformer as TR
+from repro.models.sharding import param_specs
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    n_nodes: int
+    eta: float = 1e-2
+    alpha: float = 0.5
+    gamma: float = 1.0
+    compressor: str = "qinf"        # identity | qinf
+    bits: int = 2
+    block: int = 256
+    prox: Optional[Prox] = None     # shared non-smooth regularizer
+    topology: str = "ring"
+    backend: str = "dense"          # dense | ring
+    pack_mode: str = "lastdim"      # lastdim | flat (§Perf iteration 2)
+    scales_bf16: bool = False       # §Perf iteration 3
+    shard_aligned_blocks: bool = False  # §Perf iteration 4: block | shard
+    tp_ways: int = 16               # model-axis width (for block alignment)
+    aux_weight: float = 0.01        # MoE load-balance weight
+    # beyond-paper: precondition the gradient estimate per node before the
+    # Prox-LEAD update (Adam second-moment normalization).  The algorithm
+    # sees a preconditioned oracle; compression/gossip are unchanged.
+    precondition: str = "none"      # none | adam
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    seed: int = 0
+
+
+class TrainState(NamedTuple):
+    plead: ProxLEADState
+    step: jax.Array
+    # adam preconditioner moments ((m, v) pytrees) or 0 when unused
+    precond: Any = jnp.int32(0)
+
+
+class DecentralizedTrainer:
+    def __init__(self, model_cfg: TR.ModelConfig, tcfg: TrainerConfig,
+                 mesh=None):
+        self.mcfg = model_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.topo = topo_mod.make_topology(tcfg.topology, tcfg.n_nodes)
+        if tcfg.compressor == "identity":
+            self.compressor: Compressor = Identity()
+        else:
+            self.compressor = QInf(bits=tcfg.bits, block=tcfg.block)
+        self.prox = tcfg.prox or NoneProx()
+        self.mixer = DenseMixer(self.topo.W)
+        self.alg = ProxLEAD(tcfg.eta, tcfg.alpha, tcfg.gamma, self.compressor,
+                            self.prox, self.mixer, oracle=None)  # type: ignore
+
+    # ------------------------------------------------------------------ init
+    def init_state(self, key) -> TrainState:
+        params = TR.init_params(self.mcfg, key)
+        N = self.tcfg.n_nodes
+        X = tmap(lambda p: jnp.broadcast_to(p[None], (N,) + p.shape), params)
+        return self.state_from_stacked(X)
+
+    def state_from_stacked(self, X) -> TrainState:
+        zeros = tmap(jnp.zeros_like, X)
+        cstate = CommState(zeros, tmap(jnp.zeros_like, X))  # W @ 0 == 0
+        plead = ProxLEADState(X, tmap(jnp.zeros_like, X), cstate,
+                              OracleState(jnp.int32(0), jnp.int32(0),
+                                          jnp.int32(0)), jnp.int32(1))
+        precond = ((tmap(jnp.zeros_like, X), tmap(jnp.zeros_like, X))
+                   if self.tcfg.precondition == "adam" else jnp.int32(0))
+        return TrainState(plead, jnp.int32(0), precond)
+
+    def abstract_state(self) -> TrainState:
+        """ShapeDtypeStruct state for dry-run lowering (no allocation)."""
+        N = self.tcfg.n_nodes
+        ap = TR.abstract_params(self.mcfg)
+        X = tmap(lambda s: jax.ShapeDtypeStruct((N,) + s.shape, s.dtype), ap)
+        zeros = X
+        cstate = CommState(zeros, zeros)
+        plead = ProxLEADState(X, zeros, cstate,
+                              OracleState(*(jax.ShapeDtypeStruct((), jnp.int32),) * 3),
+                              jax.ShapeDtypeStruct((), jnp.int32))
+        precond = ((X, X) if self.tcfg.precondition == "adam"
+                   else jax.ShapeDtypeStruct((), jnp.int32))
+        return TrainState(plead, jax.ShapeDtypeStruct((), jnp.int32), precond)
+
+    def state_specs(self, node_axes: Tuple[str, ...]):
+        """PartitionSpec pytree matching abstract_state()."""
+        ap = TR.abstract_params(self.mcfg)
+        ps = param_specs(ap, prepend=(node_axes,))
+        scalar = P()
+        plead = ProxLEADState(ps, ps, CommState(ps, ps),
+                              OracleState(scalar, scalar, scalar), scalar)
+        precond = ((ps, ps) if self.tcfg.precondition == "adam" else scalar)
+        return TrainState(plead, scalar, precond)
+
+    def batch_specs(self, batch_tree, node_axes: Tuple[str, ...]):
+        def one(leaf):
+            return P(node_axes, *((None,) * (leaf.ndim - 1)))
+        return tmap(one, batch_tree)
+
+    # ------------------------------------------------------------------ loss
+    def _node_loss(self, params, batch_node):
+        logits, _, aux = TR.forward(self.mcfg, params, batch_node)
+        ce = TR.loss_fn(self.mcfg, logits, batch_node["labels"])
+        return ce + self.tcfg.aux_weight * aux, ce
+
+    def loss_and_grad(self, X, batch):
+        def total(Xs):
+            losses, ces = jax.vmap(self._node_loss)(Xs, batch)
+            return jnp.sum(losses), jnp.mean(ces)
+
+        (tot, ce), G = jax.value_and_grad(total, has_aux=True)(X)
+        return ce, G
+
+    # ------------------------------------------------------------------ step
+    def train_step(self, state: TrainState, batch) -> Tuple[TrainState, dict]:
+        ce, G = self.loss_and_grad(state.plead.X, batch)
+        precond = state.precond
+        if self.tcfg.precondition == "adam":
+            G, precond = self._adam_precondition(G, precond, state.step)
+        key = jax.random.fold_in(jax.random.key(self.tcfg.seed), state.step)
+        if self.tcfg.backend == "ring":
+            plead = self._ring_update(state.plead, G, key)
+        else:
+            plead = self.alg.update(state.plead, G, key)
+        Xm = plead.X
+        consensus = sum(
+            jnp.sum((l - l.mean(0, keepdims=True)) ** 2)
+            for l in jax.tree_util.tree_leaves(Xm))
+        metrics = {"loss": ce, "consensus": consensus,
+                   "step": state.step}
+        return TrainState(plead, state.step + 1, precond), metrics
+
+    def _adam_precondition(self, G, precond, step):
+        """Beyond-paper: per-node Adam normalization of the gradient before
+        the Prox-LEAD update.  Moments are LOCAL (never communicated), so
+        the wire cost is identical; the gossip operates on the
+        preconditioned direction."""
+        b1, b2, eps = self.tcfg.adam_b1, self.tcfg.adam_b2, self.tcfg.adam_eps
+        m, v = precond
+        m = tmap(lambda mm, g: b1 * mm + (1 - b1) * g, m, G)
+        v = tmap(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, G)
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 / (1.0 - b1 ** t)
+        c2 = 1.0 / (1.0 - b2 ** t)
+        Gp = tmap(lambda mm, vv: (mm * c1) / (jnp.sqrt(vv * c2) + eps), m, v)
+        return Gp, (m, v)
+
+    # ------------------------------------------------- ring (shard_map) path
+    def _ring_update(self, plead: ProxLEADState, G, key) -> ProxLEADState:
+        """Lines 6-10 with the COMM exchange ppermuting packed payloads.
+
+        Runs inside shard_map over the node axes; the model axis stays
+        auto (GSPMD).  Requires a concrete mesh."""
+        assert self.mesh is not None, "ring backend needs a mesh"
+        tcfg = self.tcfg
+        from repro.models.sharding import node_axes as mesh_node_axes
+        naxes = mesh_node_axes(self.mesh)
+        N = tcfg.n_nodes
+        eta, alpha, gamma = tcfg.eta, tcfg.alpha, tcfg.gamma
+        w_self, w_nb = 1.0 / 3.0, 1.0 / 3.0
+        bits, block = tcfg.bits, tcfg.block
+        use_q = not isinstance(self.compressor, Identity)
+
+        perm_fwd = [(i, (i + 1) % N) for i in range(N)]
+        perm_bwd = [(i, (i - 1) % N) for i in range(N)]
+
+        def pp(x, perm):
+            return jax.lax.ppermute(x, naxes if len(naxes) > 1 else naxes[0],
+                                    perm)
+
+        def local_step(X, D, H, Hw, Gl, k_arr):
+            # leaves have a leading local node dim of size 1
+            idx = jax.lax.axis_index(naxes if len(naxes) > 1 else naxes[0])
+            leaves_X, treedef = jax.tree_util.tree_flatten(X)
+            leaves = {
+                "X": leaves_X,
+                "D": treedef.flatten_up_to(D),
+                "H": treedef.flatten_up_to(H),
+                "Hw": treedef.flatten_up_to(Hw),
+                "G": treedef.flatten_up_to(Gl),
+            }
+            key_local = jax.random.fold_in(jax.random.wrap_key_data(k_arr), idx)
+            nX, nD, nH, nHw = [], [], [], []
+            for j, (x, d, h, hw, g) in enumerate(zip(
+                    leaves["X"], leaves["D"], leaves["H"], leaves["Hw"],
+                    leaves["G"])):
+                kj = jax.random.fold_in(key_local, j)
+                z = x - eta * g - eta * d
+                diff = z - h
+                if use_q:
+                    blk = block
+                    if tcfg.shard_aligned_blocks:
+                        # align quantization blocks to the model-shard
+                        # boundary: the (.., nb, blk) reshape then never
+                        # crosses shards, so no gather is induced.  Still a
+                        # valid Assumption-2 blockwise quantizer (smaller
+                        # blocks -> slightly more scales, smaller C).
+                        ld = diff.shape[-1]
+                        shard = ld // tcfg.tp_ways if ld % tcfg.tp_ways == 0 \
+                            else ld
+                        # largest EVEN divisor (nibble packing pairs the
+                        # last axis); odd shards fall back to pairing-safe 2
+                        evens = [d for d in range(2, min(block, shard) + 1, 2)
+                                 if shard % d == 0]
+                        blk = max(evens) if evens else 2
+                    codes, scales = kops.qinf_quantize_lastdim(
+                        diff, kj, bits=bits, block=blk)
+                    if tcfg.scales_bf16:
+                        scales = scales.astype(jnp.bfloat16)
+                    if tcfg.pack_mode == "lastdim":
+                        packed = kops.pack_codes_lastdim(codes, bits=bits)
+                        unpack = lambda pk: kops.unpack_codes_lastdim(
+                            pk, bits=bits)
+                    else:  # flat: reshape across sharded dims (baseline)
+                        packed = kops.pack_codes(codes, bits=bits)
+                        unpack = lambda pk: kops.unpack_codes(
+                            pk, bits=bits, n=codes.size).reshape(codes.shape)
+                    # the ONLY communication: packed codes + scales
+                    p_r, s_r = pp(packed, perm_fwd), pp(scales, perm_fwd)
+                    p_l, s_l = pp(packed, perm_bwd), pp(scales, perm_bwd)
+                    dq = lambda pk, sc, b=blk: kops.qinf_dequantize_lastdim(
+                        unpack(pk), sc.astype(jnp.float32), diff.shape,
+                        diff.dtype, block=b)
+                    q_self = kops.qinf_dequantize_lastdim(
+                        codes, scales.astype(jnp.float32), diff.shape,
+                        diff.dtype, block=blk)
+                    wq = (w_self * q_self + w_nb * (dq(p_l, s_l) + dq(p_r, s_r)))
+                else:
+                    q_self = diff
+                    wq = w_self * diff + w_nb * (pp(diff, perm_bwd)
+                                                 + pp(diff, perm_fwd))
+                zhat = h + q_self
+                zhat_w = hw + wq
+                dnew = d + gamma / (2 * eta) * (zhat - zhat_w)
+                v = z - gamma / 2.0 * (zhat - zhat_w)
+                xnew = self.prox(v, eta)
+                nX.append(xnew)
+                nD.append(dnew)
+                nH.append((1 - alpha) * h + alpha * zhat)
+                nHw.append((1 - alpha) * hw + alpha * zhat_w)
+            unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+            return unf(nX), unf(nD), unf(nH), unf(nHw)
+
+        # shard_map specs mention ONLY the manual (node) axes; the model-axis
+        # sharding of trailing dims stays under GSPMD (auto axes).
+        specs = tmap(lambda l: P(naxes, *((None,) * (l.ndim - 1))), plead.X)
+        key_data = jax.random.key_data(key)
+        shmapped = jax.shard_map(
+            local_step, mesh=self.mesh,
+            in_specs=(specs, specs, specs, specs, specs, P()),
+            out_specs=(specs, specs, specs, specs),
+            axis_names=set(naxes), check_vma=False)
+        nX, nD, nH, nHw = shmapped(plead.X, plead.D, plead.comm.H,
+                                   plead.comm.Hw, G, key_data)
+        return ProxLEADState(nX, nD, CommState(nH, nHw), plead.oracle,
+                             plead.k + 1)

@@ -1,0 +1,17 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets its own flag in a
+# subprocess).  Also keep XLA from grabbing many threads on the 1-core box.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,56 @@
+"""Shared test problems: small strongly-convex decentralized instances."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import oracles
+
+
+def ridge_problem(n=8, m=5, bs=4, p=20, lam2=0.1, het=0.3, noise=0.01, seed=0):
+    """Heterogeneous decentralized ridge regression with a closed-form optimum.
+
+    Returns (problem, xstar (p,), mu, L, X0 (n,p))."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, m, bs, p))
+    A = A + rng.normal(size=(n, 1, 1, p)) * het      # non-iid nodes
+    xtrue = rng.normal(size=(p,))
+    b = np.einsum("nmbp,p->nmb", A, xtrue) + noise * rng.normal(size=(n, m, bs))
+
+    data = {"A": jnp.array(A), "b": jnp.array(b)}
+
+    def grad_batch(x, batch):
+        r = batch["A"] @ x - batch["b"]
+        return batch["A"].T @ r / bs + lam2 * x
+
+    def loss_batch(x, batch):
+        r = batch["A"] @ x - batch["b"]
+        return 0.5 * jnp.sum(r ** 2) / bs + 0.5 * lam2 * jnp.sum(x ** 2)
+
+    prob = oracles.FiniteSumProblem(grad_batch, data, n, m, loss_batch)
+
+    AA = np.einsum("nmbp,nmbq->pq", A, A) / (m * bs) / n + lam2 * np.eye(p)
+    Ab = np.einsum("nmbp,nmb->p", A, b) / (m * bs) / n
+    xstar = np.linalg.solve(AA, Ab)
+
+    Ls = [float(np.linalg.eigvalsh(
+        np.einsum("mbp,mbq->pq", A[i], A[i]) / (m * bs)).max()) + lam2
+        for i in range(n)]
+    return prob, xstar, lam2, max(Ls), jnp.zeros((n, p))
+
+
+def lasso_problem(n=8, m=5, bs=4, p=20, lam1=0.05, lam2=0.1, seed=0):
+    """Ridge smooth part + shared L1 regularizer (composite).  The optimum is
+    computed by running a long centralized proximal gradient descent."""
+    prob, _, mu, L, X0 = ridge_problem(n, m, bs, p, lam2=lam2, seed=seed)
+
+    def full_mean_grad(x):
+        G = prob.full_grad(jnp.broadcast_to(x, (n, p)))
+        return G.mean(0)
+
+    x = jnp.zeros((p,), jnp.float64)
+    eta = 1.0 / L
+    for _ in range(20000):
+        g = full_mean_grad(x)
+        z = x - eta * g
+        x = jnp.sign(z) * jnp.maximum(jnp.abs(z) - eta * lam1, 0.0)
+    return prob, np.asarray(x), mu, L, X0, lam1

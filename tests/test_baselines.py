@@ -1,0 +1,126 @@
+"""Baseline algorithms: convergence behaviours the paper reports (§5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core import compression as C
+from repro.core import oracles, prox_lead
+from repro.core import prox as proxmod
+from repro.core import topology as T
+from repro.core.comm import DenseMixer
+from tests.problems import lasso_problem, ridge_problem
+
+
+@pytest.fixture(scope="module")
+def ridge():
+    return ridge_problem()
+
+
+def _subopt(X, xstar):
+    return float(jnp.sum((X - jnp.broadcast_to(jnp.asarray(xstar), X.shape)) ** 2))
+
+
+def test_dgd_converges_with_bias(ridge):
+    """DGD with constant stepsize: converges but NOT to the optimum
+    (the convergence bias in Fig. 1a)."""
+    prob, xstar, mu, L, X0 = ridge
+    mixer = DenseMixer(T.ring(prob.n).W)
+    alg = B.ProxDGD(eta=1 / (4 * L), mixer=mixer,
+                    oracle=oracles.FullGradient(prob))
+    st, _ = alg.run(X0, 0, 3000)
+    so = _subopt(st.X, xstar)
+    assert 1e-8 < so < 5.0  # stalls at a biased point, neither exact nor diverging
+
+
+def test_nids_exact(ridge):
+    prob, xstar, mu, L, X0 = ridge
+    mixer = DenseMixer(T.ring(prob.n).W)
+    alg = B.NIDSIndependent(eta=1 / (2 * L), mixer=mixer,
+                            oracle=oracles.FullGradient(prob))
+    st, _ = alg.run(X0, 0, 1200)
+    assert _subopt(st.X, xstar) < 1e-10
+
+
+def test_pg_extra_exact(ridge):
+    prob, xstar, mu, L, X0 = ridge
+    mixer = DenseMixer(T.ring(prob.n).W)
+    alg = B.PGExtra(eta=1 / (4 * L), mixer=mixer,
+                    oracle=oracles.FullGradient(prob))
+    st, _ = alg.run(X0, 0, 3000)
+    assert _subopt(st.X, xstar) < 1e-8
+
+
+def test_nids_matches_lead_reduction(ridge):
+    """§4.3: LEAD with C=0, gamma=1 recovers NIDS — the two independent
+    implementations must converge to the same trajectory class (same fixed
+    point, similar rate)."""
+    prob, xstar, mu, L, X0 = ridge
+    mixer = DenseMixer(T.ring(prob.n).W)
+    eta = 1 / (2 * L)
+    lead_alg = prox_lead.nids(eta, mixer, oracles.FullGradient(prob))
+    key = jax.random.key(0)
+    k0, _ = jax.random.split(key)
+    st_lead = lead_alg.init(X0, k0)
+    step = jax.jit(lead_alg.step)
+    for _ in range(1200):
+        key, sub = jax.random.split(key)
+        st_lead = step(st_lead, sub)
+    nids_alg = B.NIDSIndependent(eta=eta, mixer=mixer,
+                                 oracle=oracles.FullGradient(prob))
+    st_nids, _ = nids_alg.run(X0, 0, 1200)
+    assert _subopt(st_lead.X, xstar) < 1e-9
+    assert _subopt(st_nids.X, xstar) < 1e-9
+
+
+def test_choco_converges_neighborhood(ridge):
+    prob, xstar, mu, L, X0 = ridge
+    mixer = DenseMixer(T.ring(prob.n).W)
+    alg = B.ChocoSGD(eta=1 / (8 * L), mixer=mixer,
+                     oracle=oracles.FullGradient(prob),
+                     compressor=C.QInf(bits=4, block=64), gamma_c=0.2)
+    st, _ = alg.run(X0, 0, 4000)
+    so = _subopt(st.X, xstar)
+    assert so < 5.0  # Choco with constant eta: biased neighborhood
+
+
+def test_lessbit_linear(ridge):
+    prob, xstar, mu, L, X0 = ridge
+    mixer = DenseMixer(T.ring(prob.n).W)
+    alg = B.LessBit(eta=1 / (4 * L), mixer=mixer,
+                    oracle=oracles.FullGradient(prob),
+                    compressor=C.QInf(bits=2, block=64), theta=0.2, alpha=0.5)
+    st, _ = alg.run(X0, 0, 4000)
+    assert _subopt(st.X, xstar) < 1e-8
+
+
+def test_centralized_reference(ridge):
+    prob, xstar, mu, L, X0 = ridge
+    mixer = DenseMixer(T.ring(prob.n).W)
+    alg = B.Centralized(eta=1 / L, mixer=mixer,
+                        oracle=oracles.FullGradient(prob))
+    st, _ = alg.run(X0, 0, 1500)
+    assert _subopt(st.X, xstar) < 1e-10
+
+
+def test_prox_lead_beats_lessbit_periter(ridge):
+    """§4.3 / footnote 3: the extra gradient step gives LEAD a better rate
+    than LessBit-style one-step primal-dual at the same eta."""
+    prob, xstar, mu, L, X0 = ridge
+    mixer = DenseMixer(T.ring(prob.n).W)
+    eta = 1 / (4 * L)
+    q = C.QInf(bits=2, block=64)
+    lead_alg = prox_lead.lead(eta, 0.5, 0.5, q, mixer,
+                              oracles.FullGradient(prob))
+    key = jax.random.key(0)
+    k0, _ = jax.random.split(key)
+    st = lead_alg.init(X0, k0)
+    step = jax.jit(lead_alg.step)
+    for _ in range(1000):
+        key, sub = jax.random.split(key)
+        st = step(st, sub)
+    lb = B.LessBit(eta=eta, mixer=mixer, oracle=oracles.FullGradient(prob),
+                   compressor=q, theta=0.2, alpha=0.5)
+    st_lb, _ = lb.run(X0, 0, 1000)
+    assert _subopt(st.X, xstar) < _subopt(st_lb.X, xstar)

@@ -1,0 +1,86 @@
+"""COMM procedure invariants and mixing backends."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import topology as T
+from repro.core.comm import CommState, DenseMixer, comm, init_comm_state
+
+
+def test_identity_comm_is_exact():
+    """With C=0, Zhat == Z and Zhat_w == W Z exactly."""
+    topo = T.ring(8)
+    mixer = DenseMixer(topo.W)
+    Z = jax.random.normal(jax.random.key(0), (8, 16), jnp.float64)
+    H = jax.random.normal(jax.random.key(1), (8, 16), jnp.float64)
+    state = init_comm_state(H, mixer)
+    zhat, zhat_w, new = comm(Z, state, 0.5, C.Identity(), None, mixer)
+    np.testing.assert_allclose(np.asarray(zhat), np.asarray(Z), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(zhat_w),
+                               np.asarray(mixer(Z)), rtol=1e-12)
+
+
+def test_hw_tracks_WH_invariant():
+    """Hw^{k} == W H^{k} must hold for all k (induction in paper §2)."""
+    topo = T.ring(8)
+    mixer = DenseMixer(topo.W)
+    q = C.QInf(bits=2, block=16)
+    H = jnp.zeros((8, 16), jnp.float64)
+    state = init_comm_state(H, mixer)
+    key = jax.random.key(0)
+    for k in range(5):
+        key, kz, kc = jax.random.split(key, 3)
+        Z = jax.random.normal(kz, (8, 16), jnp.float64)
+        _, _, state = comm(Z, state, 0.5, q, kc, mixer)
+        np.testing.assert_allclose(np.asarray(state.Hw),
+                                   np.asarray(mixer(state.H)), atol=1e-10)
+
+
+def test_compression_error_vanishes_at_fixed_point():
+    """When Z == H, the difference is 0, Q(0) = 0, so Zhat == H == Z."""
+    topo = T.ring(4)
+    mixer = DenseMixer(topo.W)
+    q = C.QInf(bits=1, block=8)
+    Z = jax.random.normal(jax.random.key(0), (4, 8), jnp.float64)
+    state = init_comm_state(Z, mixer)
+    zhat, zhat_w, _ = comm(Z, state, 0.5, q, jax.random.key(1), mixer)
+    np.testing.assert_allclose(np.asarray(zhat), np.asarray(Z), atol=1e-12)
+
+
+def test_mean_preservation():
+    """column mean of (Zhat - Zhat_w) must be ~0: D integrates it (the
+    drift bug we fixed — guards the exact-stochastic W correction)."""
+    topo = T.ring(8)
+    mixer = DenseMixer(topo.W)
+    q = C.QInf(bits=2, block=16)
+    state = init_comm_state(jnp.zeros((8, 16), jnp.float64), mixer)
+    key = jax.random.key(0)
+    worst = 0.0
+    for k in range(20):
+        key, kz, kc = jax.random.split(key, 3)
+        Z = jax.random.normal(kz, (8, 16), jnp.float64) * 100
+        zhat, zhat_w, state = comm(Z, state, 0.5, q, kc, mixer)
+        diff = zhat - zhat_w
+        worst = max(worst, float(jnp.abs(diff.mean(0)).max()))
+    assert worst < 1e-10
+
+
+def test_dense_mixer_float32_mean_preserving():
+    topo = T.ring(8)
+    mixer = DenseMixer(topo.W)
+    X = jax.random.normal(jax.random.key(0), (8, 64), jnp.float32) * 10
+    out = mixer(X)
+    np.testing.assert_allclose(np.asarray(out.mean(0)), np.asarray(X.mean(0)),
+                               atol=2e-5)
+
+
+def test_alpha_zero_freezes_H():
+    topo = T.ring(4)
+    mixer = DenseMixer(topo.W)
+    H = jax.random.normal(jax.random.key(0), (4, 8), jnp.float64)
+    state = init_comm_state(H, mixer)
+    Z = jax.random.normal(jax.random.key(1), (4, 8), jnp.float64)
+    _, _, new = comm(Z, state, 0.0, C.Identity(), None, mixer)
+    np.testing.assert_allclose(np.asarray(new.H), np.asarray(H))

@@ -1,0 +1,116 @@
+"""Compressor unit + property tests (paper Assumption 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+def _q(bits=2, block=64):
+    return C.QInf(bits=bits, block=block)
+
+
+class TestQInf:
+    @pytest.mark.parametrize("bits", [1, 2, 4, 7])
+    @pytest.mark.parametrize("shape", [(10,), (3, 100), (7, 13, 5), (256,), (8, 256)])
+    def test_roundtrip_shapes(self, bits, shape):
+        x = jax.random.normal(jax.random.key(0), shape)
+        q = _q(bits)
+        out = q(x, jax.random.key(1))
+        assert out.shape == x.shape and out.dtype == x.dtype
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_error_bounded_by_scale(self):
+        # |Q(x) - x| <= scale = maxabs / 2^{b-1} per block, elementwise
+        x = jax.random.normal(jax.random.key(0), (4, 64)) * 10
+        q = C.QInf(bits=2, block=64)
+        out = q(x, jax.random.key(1))
+        scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 2.0
+        assert (jnp.abs(out - x) <= scale + 1e-6).all()
+
+    def test_unbiased_statistical(self):
+        x = jax.random.normal(jax.random.key(0), (64,))
+        q = _q(bits=2)
+        trials = 4000
+        keys = jax.random.split(jax.random.key(1), trials)
+        mean_est = jnp.mean(jax.vmap(lambda k: q(x, k))(keys), axis=0)
+        # per-element std of the quantizer error <= scale; mean err ~ scale/sqrt(T)
+        scale = float(jnp.max(jnp.abs(x))) / 2.0
+        tol = 5 * scale / np.sqrt(trials)
+        assert float(jnp.abs(mean_est - x).max()) < tol
+
+    def test_assumption2_variance(self):
+        x = jax.random.normal(jax.random.key(2), (512,))
+        q = _q(bits=2, block=256)
+        emp = C.empirical_C(q, x, jax.random.key(3), trials=64)
+        assert emp <= q.C  # conservative bound holds
+        assert emp < 2.0   # and aggressive 2-bit is far below worst case
+
+    def test_zero_input(self):
+        q = _q()
+        out = q(jnp.zeros((128,)), jax.random.key(0))
+        assert (out == 0).all()
+
+    def test_higher_bits_lower_error(self):
+        x = jax.random.normal(jax.random.key(0), (1024,))
+        errs = []
+        for b in [1, 2, 4, 6]:
+            q = _q(bits=b, block=256)
+            e = jnp.mean((q(x, jax.random.key(1)) - x) ** 2)
+            errs.append(float(e))
+        assert errs == sorted(errs, reverse=True)
+
+    def test_payload_bits_accounting(self):
+        q = C.QInf(bits=2, block=256)
+        bits = q.payload_bits((1024,))
+        assert bits == 1024 * 2 + 4 * 32
+        assert bits < 1024 * 32  # beats f32 by >10x
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 6),
+       st.floats(0.1, 100.0), st.integers(0, 2 ** 31 - 1))
+def test_qinf_property(n, bits, scale, seed):
+    """Error bound and shape invariants across random sizes/bits/scales."""
+    x = jax.random.normal(jax.random.key(seed), (n,)) * scale
+    q = C.QInf(bits=bits, block=64)
+    out = q(x, jax.random.key(seed + 1))
+    assert out.shape == x.shape
+    # blockwise error bound
+    nb = -(-n // 64)
+    pad = jnp.zeros((nb * 64,)).at[:n].set(x).reshape(nb, 64)
+    bound = jnp.max(jnp.abs(pad), axis=1) / 2 ** (bits - 1)
+    outp = jnp.zeros((nb * 64,)).at[:n].set(out).reshape(nb, 64)
+    assert (jnp.abs(outp - pad) <= bound[:, None] + 1e-5).all()
+
+
+class TestRandK:
+    def test_unbiased(self):
+        x = jax.random.normal(jax.random.key(0), (100,))
+        q = C.RandK(frac=0.3)
+        keys = jax.random.split(jax.random.key(1), 3000)
+        est = jnp.mean(jax.vmap(lambda k: q(x, k))(keys), axis=0)
+        assert float(jnp.abs(est - x).max()) < 0.2
+
+    def test_sparsity(self):
+        x = jnp.ones((100,))
+        q = C.RandK(frac=0.1)
+        out = q(x, jax.random.key(0))
+        assert int((out != 0).sum()) == 10
+
+
+class TestTopK:
+    def test_keeps_largest(self):
+        x = jnp.array([0.1, -5.0, 0.2, 3.0, 0.0])
+        q = C.TopK(frac=0.4)
+        out = q(x, None)
+        np.testing.assert_allclose(out, [0, -5.0, 0, 3.0, 0])
+
+
+def test_registry():
+    assert isinstance(C.make_compressor("identity"), C.Identity)
+    assert C.make_compressor("qinf", bits=4).bits == 4
+    with pytest.raises(ValueError):
+        C.make_compressor("nope")

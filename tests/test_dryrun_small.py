@@ -1,0 +1,200 @@
+"""Dry-run machinery tests.
+
+Device-count-sensitive pieces run in subprocesses (the main test process
+must keep exactly 1 device).  A small-mesh end-to-end lowering runs with 8
+fake devices; the roofline HLO parser is tested in-process on string
+fixtures.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch import roofline
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sub(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=560)
+
+
+class TestRooflineParser:
+    HLO = textwrap.dedent("""\
+    HloModule test
+
+    %cond.1 (p: s32[]) -> pred[] {
+      %c = s32[] constant(28)
+      ROOT %lt = pred[] compare(%p, %c), direction=LT
+    }
+
+    %body.1 (p: s32[]) -> s32[] {
+      %ag = f32[16,64]{1,0} all-gather(%x), replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+      ROOT %out = s32[] add(%p, %one)
+    }
+
+    ENTRY %main () -> f32[] {
+      %w = (s32[]) while(%init), condition=%cond.1, body=%body.1
+      %ar = f32[128]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%sum
+      %cp = bf16[256]{0} collective-permute(%z), source_target_pairs={{0,1},{1,0}}
+      ROOT %r = f32[] constant(0)
+    }
+    """)
+
+    def test_loop_multiplier_applied(self):
+        out = roofline.collective_bytes(self.HLO)
+        # all-gather inside 28-trip loop: 16*64*4 bytes * 15/16 * 28
+        expect_ag = 16 * 64 * 4 * 15 / 16 * 28
+        assert out["all-gather"] == pytest.approx(expect_ag)
+
+    def test_entry_counted_once(self):
+        out = roofline.collective_bytes(self.HLO)
+        assert out["all-reduce"] == pytest.approx(2 * 128 * 4 * 3 / 4)
+        assert out["collective-permute"] == pytest.approx(256 * 2)
+
+    def test_shape_bytes_tuple(self):
+        assert roofline._shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+class TestAnalyticModels:
+    def test_flops_scale_with_tokens(self):
+        from repro import configs
+        from repro.configs import shapes as shp
+        cfg = configs.get("yi-9b")
+        f_train = roofline.analytic_flops(cfg, shp.SHAPES["train_4k"])
+        f_dec = roofline.analytic_flops(cfg, shp.SHAPES["decode_32k"])
+        assert f_train > 100 * f_dec
+
+    def test_moe_cheaper_than_dense_equiv(self):
+        from repro import configs
+        from repro.configs import shapes as shp
+        cfg = configs.get("mixtral-8x7b")
+        n_all = cfg.param_count()
+        n_act = cfg.param_count(active_only=True)
+        assert n_act < 0.45 * n_all  # top-2 of 8 experts
+
+
+@pytest.mark.slow
+class TestSmallMeshLowering:
+    """End-to-end lowering on an 8-device fake mesh (subprocess)."""
+
+    def test_train_and_decode_lower(self):
+        code = """
+        import jax, jax.numpy as jnp, dataclasses
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import configs
+        from repro.configs import shapes as shp
+        from repro.optim import DecentralizedTrainer, TrainerConfig
+        from repro.models import transformer as TR
+        from repro.models.sharding import param_specs
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = configs.get("qwen3-1.7b").reduced(n_layers=2, d_model=128)
+        cfg = dataclasses.replace(cfg, dtype=jnp.bfloat16)
+        tr = DecentralizedTrainer(cfg, TrainerConfig(n_nodes=4), mesh=mesh)
+        state = tr.abstract_state()
+        shape = shp.InputShape("t", 64, 8, "train")
+        batch = shp.train_input_specs(cfg, shape, 4)
+        ns = lambda t: jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        with jax.set_mesh(mesh):
+            c = jax.jit(tr.train_step,
+                        in_shardings=(ns(tr.state_specs(("data",))),
+                                      ns(tr.batch_specs(batch, ("data",))))
+                        ).lower(state, batch).compile()
+        assert c.memory_analysis().temp_size_in_bytes >= 0
+        print("TRAIN_OK")
+
+        params = TR.abstract_params(cfg)
+        cache = TR.init_cache(cfg, 8, 64, abstract=True)
+        toks = jax.ShapeDtypeStruct((8, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        with jax.set_mesh(mesh):
+            c2 = jax.jit(lambda p, c_, t, q: TR.decode_step(cfg, p, c_, t, q)
+                         ).lower(params, cache, toks, pos).compile()
+        print("DECODE_OK")
+        """
+        r = _run_sub(code)
+        assert "TRAIN_OK" in r.stdout and "DECODE_OK" in r.stdout, \
+            r.stdout + r.stderr[-2000:]
+
+    def test_ring_backend_lowers_with_ppermute(self):
+        code = """
+        import jax, jax.numpy as jnp, dataclasses
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import configs
+        from repro.configs import shapes as shp
+        from repro.optim import DecentralizedTrainer, TrainerConfig
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = configs.get("qwen3-1.7b").reduced(n_layers=2, d_model=128)
+        cfg = dataclasses.replace(cfg, dtype=jnp.bfloat16)
+        tr = DecentralizedTrainer(
+            cfg, TrainerConfig(n_nodes=4, backend="ring", bits=2), mesh=mesh)
+        state = tr.abstract_state()
+        shape = shp.InputShape("t", 64, 8, "train")
+        batch = shp.train_input_specs(cfg, shape, 4)
+        ns = lambda t: jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                tr.train_step,
+                in_shardings=(ns(tr.state_specs(("data",))),
+                              ns(tr.batch_specs(batch, ("data",))))
+                ).lower(state, batch)
+        txt = lowered.compile().as_text()
+        assert "collective-permute" in txt
+        # payload ppermutes must be u8 (packed codes), not float
+        import re
+        u8 = [l for l in txt.splitlines()
+              if "collective-permute" in l and "u8[" in l]
+        assert u8, "no packed-payload ppermute found"
+        print("RING_OK")
+        """
+        r = _run_sub(code)
+        assert "RING_OK" in r.stdout, r.stdout + r.stderr[-2000:]
+
+    def test_ring_equals_dense_on_ring_topology(self):
+        """The two gossip backends must produce identical updates (C=0)."""
+        code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.data.pipeline import DecentralizedBatches
+        from repro.optim import DecentralizedTrainer, TrainerConfig
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = configs.get("qwen3-1.7b").reduced(n_layers=2, d_model=64)
+        data = DecentralizedBatches(4, 2, 16, cfg.vocab)
+        outs = []
+        for backend in ("dense", "ring"):
+            tr = DecentralizedTrainer(
+                cfg, TrainerConfig(n_nodes=4, backend=backend,
+                                   compressor="identity", eta=0.1),
+                mesh=mesh)
+            state = tr.init_state(jax.random.key(0))
+            with jax.set_mesh(mesh):
+                step = jax.jit(tr.train_step)
+                for t in range(3):
+                    state, m = step(state, data.batch_at(t))
+            outs.append(jax.device_get(
+                jax.tree_util.tree_leaves(state.plead.X)[0]))
+        err = float(np.abs(outs[0] - outs[1]).max())
+        scale = float(np.abs(outs[0]).max())
+        assert err < 1e-4 * max(scale, 1), (err, scale)
+        print("EQUIV_OK", err)
+        """
+        r = _run_sub(code)
+        assert "EQUIV_OK" in r.stdout, r.stdout + r.stderr[-2000:]

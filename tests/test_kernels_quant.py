@@ -1,0 +1,105 @@
+"""Pallas quantization kernel vs pure-jnp oracle: shape/dtype/bit sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops as kops
+from repro.kernels import quantize as qk
+from repro.kernels import ref as kref
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 7])
+@pytest.mark.parametrize("rows", [8, 16, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float64])
+def test_kernel_matches_ref_blocks(bits, rows, dtype):
+    x = (jax.random.normal(jax.random.key(0), (rows, 256)) * 3).astype(dtype)
+    u = jax.random.uniform(jax.random.key(1), (rows, 256), jnp.float32)
+    ck, sk = qk.qinf_quantize_blocks(x, u, bits=bits, block=256, interpret=True)
+    cr, sr = kref.qinf_quantize_blocks_ref(x, u, bits)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    # dequant kernel vs ref
+    dk = qk.qinf_dequantize_blocks(ck, sk, block=256, interpret=True)
+    dr = kref.qinf_dequantize_blocks_ref(cr, sr)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(5,), (1000,), (3, 7, 11), (256,), (2, 256),
+                                   (8, 256), (129,)])
+@pytest.mark.parametrize("bits", [2, 4])
+def test_ops_wrapper_pallas_vs_ref(shape, bits):
+    x = jax.random.normal(jax.random.key(0), shape) * 2
+    key = jax.random.key(1)
+    cp, sp, mp = kops.qinf_quantize(x, key, bits=bits, use_pallas=True)
+    cr, sr, mr = kops.qinf_quantize(x, key, bits=bits, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(cp), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr), rtol=1e-6)
+    outp = kops.qinf_dequantize(cp, sp, mp, shape, jnp.float32, bits=bits)
+    outr = kops.qinf_dequantize(cr, sr, mr, shape, jnp.float32, bits=bits,
+                                use_pallas=False)
+    np.testing.assert_allclose(np.asarray(outp), np.asarray(outr), rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2000), st.integers(1, 7), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(n, bits, seed):
+    lim = 2 ** (bits - 1)
+    codes = jax.random.randint(jax.random.key(seed), (n,), -lim, lim + 1,
+                               dtype=jnp.int32).astype(jnp.int8)
+    packed = kops.pack_codes(codes, bits=bits)
+    un = kops.unpack_codes(packed, bits=bits, n=n)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(codes))
+    # wire size: nibble for <=3 bits, byte otherwise
+    per = kops.wire_bits_per_element(bits)
+    assert packed.size == -(-n * per // 8)
+
+
+def test_code_range_and_scale_semantics():
+    bits = 3
+    x = jnp.linspace(-4, 4, 256).reshape(1, 256).repeat(8, 0)
+    u = jnp.zeros((8, 256))
+    c, s = qk.qinf_quantize_blocks(x, u, bits=bits, block=256, interpret=True)
+    lim = 2 ** (bits - 1)
+    assert int(jnp.abs(c.astype(jnp.int32)).max()) <= lim
+    # scale * lim == maxabs
+    np.testing.assert_allclose(float(s[0, 0] * lim), 4.0, rtol=1e-6)
+
+
+def test_padding_blocks_are_zero():
+    # 300 elements -> 2 blocks of 256 with padding; padded tail must decode to 0
+    x = jnp.ones((300,))
+    c, s, m = kops.qinf_quantize(x, jax.random.key(0), bits=2)
+    out = kops.qinf_dequantize(c, s, m, (300,), jnp.float32, bits=2)
+    np.testing.assert_allclose(np.asarray(out), np.ones(300), atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 7])
+@pytest.mark.parametrize("shape", [(4, 6, 8), (2, 256), (16,)])
+def test_pack_lastdim_roundtrip(bits, shape):
+    lim = 2 ** (bits - 1)
+    codes = jax.random.randint(jax.random.key(0), shape, -lim, lim + 1,
+                               dtype=jnp.int32).astype(jnp.int8)
+    packed = kops.pack_codes_lastdim(codes, bits=bits)
+    un = kops.unpack_codes_lastdim(packed, bits=bits)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(codes))
+    if kops.wire_bits_per_element(bits) == 4:
+        assert packed.shape == shape[:-1] + (shape[-1] // 2,)
+
+
+@pytest.mark.parametrize("block", [2, 48, 88, 128, 256])
+def test_lastdim_quantize_any_block(block):
+    """Shard-aligned block sizes (§Perf it4) are still valid quantizers."""
+    x = jax.random.normal(jax.random.key(0), (3, 1408)) * 2
+    codes, scales = kops.qinf_quantize_lastdim(x, jax.random.key(1), bits=2,
+                                               block=block)
+    out = kops.qinf_dequantize_lastdim(codes, scales, x.shape, x.dtype,
+                                       block=block)
+    nb = -(-1408 // block)
+    assert codes.shape == (3, nb, block)
+    # elementwise error bounded by the per-block scale
+    pad = jnp.zeros((3, nb * block)).at[:, :1408].set(x).reshape(3, nb, block)
+    bound = jnp.max(jnp.abs(pad), axis=-1, keepdims=True) / 2.0
+    outp = jnp.zeros((3, nb * block)).at[:, :1408].set(out).reshape(3, nb, block)
+    assert (jnp.abs(outp - pad) <= bound + 1e-5).all()

@@ -1,0 +1,80 @@
+"""Gradient oracles: unbiasedness and variance-reduction invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import oracles
+from tests.problems import ridge_problem
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return ridge_problem()[0]
+
+
+def _stacked_x(prob, seed=3):
+    return jax.random.normal(jax.random.key(seed), (prob.n, 20), jnp.float64)
+
+
+def test_full_grad_matches_manual(prob):
+    X = _stacked_x(prob)
+    G = prob.full_grad(X)
+    # manual node 0
+    g0 = jnp.mean(jnp.stack([
+        prob.grad_batch(X[0], prob.batch(0, l)) for l in range(prob.m)]), 0)
+    np.testing.assert_allclose(np.asarray(G[0]), np.asarray(g0), rtol=1e-10)
+
+
+@pytest.mark.parametrize("name", ["sgd", "lsvrg", "saga"])
+def test_unbiasedness(prob, name):
+    X = _stacked_x(prob)
+    orc = oracles.make_oracle(name, prob)
+    state = orc.init(X)
+    Gtrue = prob.full_grad(X)
+    trials = 3000
+    keys = jax.random.split(jax.random.key(0), trials)
+
+    def one(k):
+        return orc.sample(X, state, k)[0]
+
+    Gbar = jnp.mean(jax.vmap(one)(keys), axis=0)
+    err = float(jnp.abs(Gbar - Gtrue).max())
+    scale = float(jnp.abs(Gtrue).max())
+    assert err < 0.15 * scale + 5.0 / np.sqrt(trials)
+
+
+def test_vr_variance_zero_at_reference(prob):
+    """LSVRG/SAGA gradients are exact when x == reference point."""
+    X = _stacked_x(prob)
+    Gtrue = prob.full_grad(X)
+    for name in ["lsvrg", "saga"]:
+        orc = oracles.make_oracle(name, prob)
+        state = orc.init(X)  # references at X
+        G, _ = orc.sample(X, state, jax.random.key(1))
+        np.testing.assert_allclose(np.asarray(G), np.asarray(Gtrue), rtol=1e-8,
+                                   err_msg=name)
+
+
+def test_saga_table_update(prob):
+    X = _stacked_x(prob)
+    orc = oracles.make_oracle("saga", prob)
+    state = orc.init(jnp.zeros_like(X))
+    G, new_state = orc.sample(X, state, jax.random.key(0))
+    # exactly one table row per node replaced, and mean consistent
+    tab = np.asarray(new_state.ref)
+    mean = np.asarray(new_state.ref_grad)
+    np.testing.assert_allclose(mean, tab.mean(1), rtol=1e-9)
+    changed = (np.abs(tab - np.asarray(state.ref)) > 1e-12).any(axis=2).sum(axis=1)
+    assert (changed <= 1).all()
+
+
+def test_lsvrg_reference_update_probability(prob):
+    X = _stacked_x(prob)
+    orc = oracles.LSVRG(prob, prob_update=1.0)
+    state = orc.init(jnp.zeros_like(X))
+    _, new_state = orc.sample(X, state, jax.random.key(0))
+    np.testing.assert_allclose(np.asarray(new_state.ref), np.asarray(X))
+    orc0 = oracles.LSVRG(prob, prob_update=1e-12)
+    _, ns0 = orc0.sample(X, state, jax.random.key(0))
+    np.testing.assert_allclose(np.asarray(ns0.ref), 0.0)

@@ -1,0 +1,83 @@
+"""Prox operators: closed forms, nonexpansiveness, optimality conditions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prox as P
+
+
+def test_l1_soft_threshold():
+    pr = P.L1(lam=1.0)
+    x = jnp.array([3.0, -0.5, 0.5, -2.0, 0.0])
+    np.testing.assert_allclose(pr(x, 1.0), [2.0, 0.0, 0.0, -1.0, 0.0])
+
+
+def test_l2_shrink():
+    pr = P.L2Sq(lam=2.0)
+    np.testing.assert_allclose(pr(jnp.array([3.0]), 0.5), [1.5])
+
+
+def test_elastic_net_composes():
+    pr = P.ElasticNet(lam1=1.0, lam2=2.0)
+    x = jnp.array([3.0])
+    expect = (3.0 - 1.0) / (1 + 2.0)
+    np.testing.assert_allclose(pr(x, 1.0), [expect])
+
+
+def test_group_lasso_shrinks_groups():
+    pr = P.GroupLasso(lam=1.0)
+    x = jnp.array([[3.0, 4.0], [0.3, 0.4]])  # norms 5 and 0.5
+    out = pr(x, 1.0)
+    np.testing.assert_allclose(out[0], [3.0 * 0.8, 4.0 * 0.8], rtol=1e-6)
+    np.testing.assert_allclose(out[1], [0.0, 0.0], atol=1e-7)
+
+
+def test_nonneg_projection():
+    pr = P.NonNeg()
+    np.testing.assert_allclose(pr(jnp.array([-1.0, 2.0]), 1.0), [0.0, 2.0])
+
+
+def test_none_is_identity():
+    pr = P.NoneProx()
+    x = jnp.array([1.0, -2.0])
+    np.testing.assert_allclose(pr(x, 0.1), x)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(["l1", "l2sq", "elastic_net", "nonneg"]),
+       st.floats(0.01, 10.0),
+       st.lists(st.floats(-100, 100), min_size=1, max_size=20),
+       st.lists(st.floats(-100, 100), min_size=1, max_size=20))
+def test_nonexpansive(name, eta, xs, ys):
+    """||prox(x) - prox(y)|| <= ||x - y|| — the property Lemma 3 relies on."""
+    n = min(len(xs), len(ys))
+    x = jnp.array(xs[:n])
+    y = jnp.array(ys[:n])
+    pr = P.make_prox(name, **({} if name == "nonneg" else {}))
+    d_out = float(jnp.linalg.norm(pr(x, eta) - pr(y, eta)))
+    d_in = float(jnp.linalg.norm(x - y))
+    assert d_out <= d_in + 1e-8
+
+
+@pytest.mark.parametrize("name,kw", [("l1", {"lam": 0.3}),
+                                     ("l2sq", {"lam": 0.7}),
+                                     ("elastic_net", {"lam1": 0.2, "lam2": 0.4})])
+def test_prox_optimality(name, kw):
+    """prox_{eta r}(v) minimizes r(z) + ||z-v||^2/(2 eta): check vs grid."""
+    pr = P.make_prox(name, **kw)
+    v = jnp.array([1.3])
+    eta = 0.9
+    z_star = pr(v, eta)
+    obj = lambda z: pr.value(jnp.array([z])) + (z - 1.3) ** 2 / (2 * eta)
+    zs = np.linspace(-2, 2, 4001)
+    best = zs[np.argmin([float(obj(z)) for z in zs])]
+    np.testing.assert_allclose(float(z_star[0]), best, atol=2e-3)
+
+
+def test_tree_call():
+    pr = P.L1(lam=1.0)
+    tree = {"a": jnp.array([2.0]), "b": jnp.array([-3.0])}
+    out = pr.tree_call(tree, 1.0)
+    np.testing.assert_allclose(out["a"], [1.0])
+    np.testing.assert_allclose(out["b"], [-2.0])

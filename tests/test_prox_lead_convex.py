@@ -1,0 +1,182 @@
+"""Convergence of Prox-LEAD on strongly-convex problems vs paper theorems."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import oracles, prox_lead, theory
+from repro.core import prox as proxmod
+from repro.core import topology as T
+from repro.core.comm import DenseMixer
+from tests.problems import lasso_problem, ridge_problem
+
+
+@pytest.fixture(scope="module")
+def ridge():
+    return ridge_problem()
+
+
+@pytest.fixture(scope="module")
+def lasso():
+    return lasso_problem()
+
+
+def _subopt(state, xstar):
+    Xs = jnp.broadcast_to(jnp.asarray(xstar), state.X.shape)
+    return float(jnp.sum((state.X - Xs) ** 2))
+
+
+def _run(alg, X0, steps, seed=0):
+    key = jax.random.key(seed)
+    k0, key = jax.random.split(key)
+    state = alg.init(X0, k0)
+    step = jax.jit(alg.step)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        state = step(state, sub)
+    return state
+
+
+class TestSmoothLinearConvergence:
+    def test_full_grad_no_compression(self, ridge):
+        prob, xstar, mu, L, X0 = ridge
+        mixer = DenseMixer(T.ring(prob.n).W)
+        alg = prox_lead.lead(1 / (2 * L), 1.0, 1.0, C.Identity(), mixer,
+                             oracles.FullGradient(prob))
+        st = _run(alg, X0, 600)
+        assert _subopt(st, xstar) < 1e-10
+
+    def test_full_grad_2bit(self, ridge):
+        """Headline claim: arbitrary compression, still linear convergence."""
+        prob, xstar, mu, L, X0 = ridge
+        mixer = DenseMixer(T.ring(prob.n).W)
+        alg = prox_lead.lead(1 / (2 * L), 0.5, 0.5, C.QInf(bits=2, block=64),
+                             mixer, oracles.FullGradient(prob))
+        st = _run(alg, X0, 800)
+        assert _subopt(st, xstar) < 1e-10
+
+    def test_1bit_extreme_compression(self, ridge):
+        prob, xstar, mu, L, X0 = ridge
+        mixer = DenseMixer(T.ring(prob.n).W)
+        alg = prox_lead.lead(1 / (2 * L), 0.4, 0.3, C.QInf(bits=1, block=64),
+                             mixer, oracles.FullGradient(prob))
+        st = _run(alg, X0, 1500)
+        assert _subopt(st, xstar) < 1e-8
+
+    @pytest.mark.parametrize("oracle_name", ["lsvrg", "saga"])
+    def test_vr_linear_to_exact(self, ridge, oracle_name):
+        """Theorems 8/9: exact linear convergence with VR + compression."""
+        prob, xstar, mu, L, X0 = ridge
+        mixer = DenseMixer(T.ring(prob.n).W)
+        orc = oracles.make_oracle(oracle_name, prob)
+        alg = prox_lead.lead(1 / (6 * L), 0.3, 0.3, C.QInf(bits=2, block=64),
+                             mixer, orc)
+        st = _run(alg, X0, 4000)
+        assert _subopt(st, xstar) < 1e-12
+
+    def test_sgd_reaches_noise_neighborhood(self, ridge):
+        prob, xstar, mu, L, X0 = ridge
+        mixer = DenseMixer(T.ring(prob.n).W)
+        alg = prox_lead.lead(1 / (2 * L), 0.3, 0.3, C.QInf(bits=2, block=64),
+                             mixer, oracles.SGD(prob))
+        st = _run(alg, X0, 1500)
+        so = _subopt(st, xstar)
+        assert so < 1.0  # converged to neighborhood, far below init (>100)
+
+    def test_consensus_achieved(self, ridge):
+        prob, xstar, mu, L, X0 = ridge
+        mixer = DenseMixer(T.ring(prob.n).W)
+        alg = prox_lead.lead(1 / (2 * L), 0.5, 0.5, C.QInf(bits=2, block=64),
+                             mixer, oracles.FullGradient(prob))
+        st = _run(alg, X0, 800)
+        cons = float(jnp.sum((st.X - st.X.mean(0)) ** 2))
+        assert cons < 1e-12
+
+
+class TestComposite:
+    def test_prox_lead_lasso_2bit(self, lasso):
+        prob, xstar, mu, L, X0, lam1 = lasso
+        mixer = DenseMixer(T.ring(prob.n).W)
+        alg = prox_lead.ProxLEAD(
+            1 / (2 * L), 0.5, 0.5, C.QInf(bits=2, block=64),
+            proxmod.L1(lam=lam1), mixer, oracles.FullGradient(prob))
+        st = _run(alg, X0, 2500)
+        assert _subopt(st, xstar) < 1e-8
+        # L1 should produce exact zeros (prox, not subgradient)
+        assert int((st.X[0] == 0).sum()) == int((np.abs(xstar) < 1e-12).sum())
+
+    def test_prox_lead_lasso_saga(self, lasso):
+        prob, xstar, mu, L, X0, lam1 = lasso
+        mixer = DenseMixer(T.ring(prob.n).W)
+        alg = prox_lead.ProxLEAD(
+            1 / (6 * L), 0.3, 0.3, C.QInf(bits=2, block=64),
+            proxmod.L1(lam=lam1), mixer, oracles.SAGA(prob))
+        st = _run(alg, X0, 5000)
+        assert _subopt(st, xstar) < 1e-8
+
+
+class TestTheoremEnvelopes:
+    def test_theorem5_rate_envelope(self, ridge):
+        """Measured contraction of ||X - X*||^2 beats the Theorem-5 rho
+        (theory is worst-case so measured should be <= rho per step)."""
+        prob, xstar, mu, L, X0 = ridge
+        topo = T.ring(prob.n)
+        q = C.QInf(bits=4, block=64)
+        Cq = 0.5  # conservative empirical C for 4-bit blockwise
+        pc = theory.ProblemConstants(mu, L, topo.lambda_max,
+                                     topo.lambda_min_pos, C=Cq, m=prob.m)
+        eta, alpha, gamma = theory.theorem5_params(pc)
+        rho, M = theory.theorem5_rate(pc, eta, alpha, gamma)
+        mixer = DenseMixer(topo.W)
+        alg = prox_lead.lead(eta, alpha, gamma, q, mixer,
+                             oracles.FullGradient(prob))
+        key = jax.random.key(0)
+        k0, key = jax.random.split(key)
+        st = alg.init(X0, k0)
+        step = jax.jit(alg.step)
+        start = _subopt(st, xstar)
+        K = 400
+        for _ in range(K):
+            key, sub = jax.random.split(key)
+            st = step(st, sub)
+        end = _subopt(st, xstar)
+        measured = (end / start) ** (1 / K)
+        assert measured <= rho + 1e-3, (measured, rho)
+
+    def test_diminishing_stepsize_converges(self, ridge):
+        """Theorem 7: O(1/k) to the exact solution with SGD oracle."""
+        prob, xstar, mu, L, X0 = ridge
+        topo = T.ring(prob.n)
+        Cq = 0.4
+        eta, alpha, gamma = prox_lead.diminishing_schedules(
+            mu, L, Cq, topo.lambda_max, L / mu, topo.kappa_g)
+        mixer = DenseMixer(topo.W)
+        alg = prox_lead.ProxLEAD(eta, alpha, gamma, C.QInf(bits=2, block=64),
+                                 proxmod.NoneProx(), mixer, oracles.SGD(prob))
+        st1 = _run(alg, X0, 300, seed=1)
+        st2 = _run(alg, X0, 3000, seed=1)
+        assert _subopt(st2, xstar) < _subopt(st1, xstar)
+
+
+class TestReductions:
+    def test_topk_rejected_without_optin(self, ridge):
+        prob, xstar, mu, L, X0 = ridge
+        mixer = DenseMixer(T.ring(prob.n).W)
+        with pytest.raises(ValueError):
+            prox_lead.lead(0.1, 0.5, 0.5, C.TopK(frac=0.3), mixer,
+                           oracles.FullGradient(prob))
+
+    def test_prox_lead_r0_equals_lead(self, ridge):
+        """Prox-LEAD with r == 0 must produce the LEAD iterates exactly."""
+        prob, xstar, mu, L, X0 = ridge
+        mixer = DenseMixer(T.ring(prob.n).W)
+        q = C.QInf(bits=2, block=64)
+        a1 = prox_lead.ProxLEAD(1 / (2 * L), 0.5, 0.5, q, proxmod.NoneProx(),
+                                mixer, oracles.FullGradient(prob))
+        a2 = prox_lead.lead(1 / (2 * L), 0.5, 0.5, q, mixer,
+                            oracles.FullGradient(prob))
+        s1 = _run(a1, X0, 50, seed=7)
+        s2 = _run(a2, X0, 50, seed=7)
+        np.testing.assert_allclose(np.asarray(s1.X), np.asarray(s2.X),
+                                   rtol=1e-12)

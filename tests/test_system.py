@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full story in two tests: (1) the paper's own workload — non-smooth
+non-iid logistic regression solved decentralized with 2-bit compressed
+communication to high accuracy; (2) the framework lift — a transformer LM
+trained decentralized with Prox-LEAD, loss down, replicas near-consensual,
+checkpoint round-trips.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import load_state, save_state
+from repro.core import compression, oracles, prox, prox_lead, topology
+from repro.core.comm import DenseMixer
+from repro.data.pipeline import DecentralizedBatches
+from repro.data.synthetic import logreg_problem
+from repro.optim import DecentralizedTrainer, TrainerConfig
+
+
+def test_paper_workload_end_to_end():
+    """8 nodes, ring(1/3), non-iid data, L1 prox, 2-bit quantized COMM,
+    SAGA oracle: objective decreases and consensus -> 0."""
+    n, p, c = 8, 784, 10
+    base = logreg_problem(lam2=0.005, n_nodes=n, n_per_node=60, n_batches=6)
+    problem = oracles.FiniteSumProblem(
+        lambda x, b: base.grad_batch(x.reshape(p, c), b).reshape(-1),
+        base.data, base.n, base.m,
+        lambda x, b: base.loss_batch(x.reshape(p, c), b))
+    alg = prox_lead.ProxLEAD(
+        eta=0.3, alpha=0.5, gamma=1.0,
+        compressor=compression.QInf(bits=2, block=256),
+        prox=prox.L1(lam=0.005),
+        mixer=DenseMixer(topology.ring(n).W),
+        oracle=oracles.SAGA(problem))
+
+    def obj(state):
+        Xr = state.X.reshape(n, p, c)
+        f = base.full_loss(Xr)
+        r = 0.005 * jnp.mean(jnp.sum(jnp.abs(Xr), axis=(1, 2)))
+        return float(f + r)
+
+    X0 = jnp.zeros((n, p * c))
+    key = jax.random.key(0)
+    k0, key = jax.random.split(key)
+    state = alg.init(X0, k0)
+    step = jax.jit(alg.step)
+    o0 = obj(state)
+    for _ in range(300):
+        key, sk = jax.random.split(key)
+        state = step(state, sk)
+    oT = obj(state)
+    cons = float(jnp.sum((state.X - state.X.mean(0)) ** 2))
+    assert oT < o0 - 0.02, (o0, oT)
+    assert cons < 1e-2
+    assert np.isfinite(np.asarray(state.X)).all()
+
+
+def test_lm_training_end_to_end(tmp_path):
+    """Decentralized LM training with compressed gossip + checkpointing."""
+    cfg = configs.get("qwen3-1.7b").reduced(n_layers=2, d_model=128)
+    tcfg = TrainerConfig(n_nodes=4, eta=0.2, compressor="qinf", bits=2)
+    tr = DecentralizedTrainer(cfg, tcfg)
+    data = DecentralizedBatches(4, 4, 32, cfg.vocab)
+    state = tr.init_state(jax.random.key(0))
+    step = jax.jit(tr.train_step)
+    losses = []
+    for t in range(30):
+        state, m = step(state, data.batch_at(t))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+    # checkpoint round-trip mid-training, then keep training: identical step
+    save_state(tmp_path, state, step=30)
+    restored = load_state(tmp_path, state, step=30)
+    s1, m1 = step(state, data.batch_at(30))
+    s2, m2 = step(restored, data.batch_at(30))
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-6)

@@ -1,0 +1,66 @@
+"""Mixing matrices: Assumption 1 and spectrum properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize("maker,kw", [
+    (T.ring, {}), (T.fully_connected, {}), (T.star, {}),
+    (T.expander, {}),
+])
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32])
+def test_assumption1(maker, kw, n):
+    topo = maker(n, **kw)
+    topo.validate()
+    assert topo.n == n
+    assert topo.kappa_g >= 1.0
+
+
+@pytest.mark.parametrize("rows,cols", [(2, 4), (4, 4), (4, 8)])
+def test_torus(rows, cols):
+    topo = T.torus2d(rows, cols)
+    topo.validate()
+
+
+def test_ring_weights_paper():
+    # paper §5.1: ring with mixing weight 1/3
+    topo = T.ring(8)
+    W = topo.W
+    assert np.allclose(np.diag(W), 1 / 3)
+    assert np.allclose(W[0, 1], 1 / 3) and np.allclose(W[0, 7], 1 / 3)
+    assert W[0, 3] == 0
+
+
+def test_fully_connected_kappa():
+    topo = T.fully_connected(8)
+    assert np.isclose(topo.kappa_g, 1.0)
+
+
+def test_ring_kappa_grows():
+    k = [T.ring(n).kappa_g for n in (4, 8, 16, 32)]
+    assert k == sorted(k)
+
+
+def test_neighbors():
+    topo = T.ring(8)
+    assert set(topo.neighbors[0]) == {1, 7}
+    assert set(topo.neighbors[3]) == {2, 4}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 40))
+def test_ring_spectrum_property(n):
+    topo = T.ring(n)
+    topo.validate()
+    ev = topo.eigvals_I_minus_W()
+    assert abs(ev[0]) < 1e-9          # one zero eigenvalue (connected)
+    assert ev[-1] <= 4 / 3 + 1e-9     # 1 - lambda_min(W) <= 4/3 for w=1/3
+
+
+def test_make_topology_dispatch():
+    assert T.make_topology("ring", 8).name == "ring"
+    assert T.make_topology("torus2d", 16).n == 16
+    with pytest.raises(ValueError):
+        T.make_topology("nope", 4)
