@@ -1,0 +1,16 @@
+# One-command gates for every PR.
+PY ?= python
+
+.PHONY: test bench-smoke lint
+
+# tier-1 verify (ROADMAP.md)
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# netsim robustness benchmark at tiny sizes (fast sanity sweep)
+bench-smoke:
+	PYTHONPATH=src:. $(PY) -m benchmarks.bench_netsim --steps 60 --quick
+
+# syntax gate (no extra deps in the container)
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples

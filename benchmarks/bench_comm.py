@@ -1,5 +1,6 @@
 """Communication accounting: payload bytes per compressor (paper Fig 1b/1d
-x-axis) + dense-vs-ring collective bytes from the dry-run artifacts."""
+x-axis), effective bits/iter under netsim fault models (droprate sweep), and
+dense-vs-ring collective bytes from the dry-run artifacts."""
 from __future__ import annotations
 
 import json
@@ -8,8 +9,12 @@ import pathlib
 import numpy as np
 
 from repro.core import compression as C
+from repro.core import topology as T
+from repro.netsim import faults as nf
+from repro.netsim import metrics as nm
 
 DIM = 784 * 10
+N_NODES = 8
 
 
 def run(verbose: bool = False):
@@ -30,6 +35,25 @@ def run(verbose: bool = False):
             print(f"  {name:12s} {bits:>9d} bits/iter  "
                   f"({f32 / bits:5.1f}x saving)")
 
+    # effective network bits/iter under fault models (ring of 8, all
+    # directed edges) — netsim bit accounting, expected value
+    topo = T.ring(N_NODES)
+    directed = int((np.abs(topo.W) > 1e-12).sum() - N_NODES)
+    q2 = C.QInf(bits=2)
+    for spec in ("", "linkdrop:0.1", "linkdrop:0.3", "linkdrop:0.5",
+                 "straggler:0.1", "linkdrop:0.1,straggler:0.1"):
+        faults = nf.make_faults(spec)
+        eff = nm.effective_bits_per_iter(q2, (DIM,), directed, faults)
+        full = nm.effective_bits_per_iter(None, (DIM,), directed, faults)
+        rows.append({"name": f"network_qinf2[{spec or 'clean'}]",
+                     "bits_per_iter": int(eff),
+                     "saving_vs_f32": round(full / eff, 2),
+                     "edge_survival": round(nf.mean_edge_survival(faults), 3)})
+        if verbose:
+            print(f"  ring8 qinf-2bit [{spec or 'clean':28s}] "
+                  f"{eff / 1e6:7.3f} Mbit/iter "
+                  f"(survival {nf.mean_edge_survival(faults):.2f})")
+
     # dense vs ring gossip wire bytes from the dry-run JSONs (if present)
     d = pathlib.Path("experiments/dryrun")
     if d.exists():
@@ -48,7 +72,16 @@ def validate(rows):
     by = {r["name"]: r for r in rows}
     checks = [("2bit payload saves >10x vs f32",
                by["payload_qinf-2bit"]["saving_vs_f32"] > 10,
-               by["payload_qinf-2bit"]["saving_vs_f32"])]
+               by["payload_qinf-2bit"]["saving_vs_f32"]),
+              ("fault-model bits scale with edge survival",
+               by["network_qinf2[linkdrop:0.5]"]["bits_per_iter"] * 2
+               == by["network_qinf2[clean]"]["bits_per_iter"],
+               by["network_qinf2[linkdrop:0.5]"]["bits_per_iter"]),
+              ("composed faults multiply survival",
+               by["network_qinf2[linkdrop:0.1,straggler:0.1]"]
+               ["edge_survival"] == round(0.9 * 0.9, 3),
+               by["network_qinf2[linkdrop:0.1,straggler:0.1]"]
+               ["edge_survival"])]
     if ("gossip_dense_qwen3_train4k" in by
             and "gossip_ring_qwen3_train4k" in by):
         dn = by["gossip_dense_qwen3_train4k"]["coll_gb_per_step"]

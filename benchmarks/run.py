@@ -26,13 +26,15 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="reduced iteration counts (CI)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig1,fig2,table3,kernels,comm")
+                    help="comma-separated subset: fig1,fig2,table3,kernels,"
+                         "comm,ablations,netsim")
     ap.add_argument("--json-out", default="experiments/bench_results.json")
     args = ap.parse_args(argv)
     steps = 200 if args.quick else args.steps
 
     from benchmarks import (ablations, bench_comm, bench_kernels,
-                            fig1_smooth, fig2_nonsmooth, table3_complexity)
+                            bench_netsim, fig1_smooth, fig2_nonsmooth,
+                            table3_complexity)
 
     suites = {
         "fig1": ("Fig.1 smooth logistic regression",
@@ -53,6 +55,9 @@ def main(argv=None):
         "ablations": ("Ablations: bits sweep + topology/kappa_g sweep",
                       lambda: ablations.run(min(500, steps), verbose=True),
                       ablations.validate),
+        "netsim": ("Netsim robustness: drop rate x compression bits",
+                   lambda: bench_netsim.run(min(400, steps), verbose=True),
+                   bench_netsim.validate),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
 

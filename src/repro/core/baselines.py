@@ -73,7 +73,7 @@ class ProxDGD(Baseline):
 
     def step(self, state, key):
         G, ostate = self.oracle.sample(state.X, state.oracle, key)
-        WX = self.mixer(state.X)
+        WX = self.mixer(state.X, state.k)
         X = self.prox.tree_call(
             tmap(lambda wx, g: wx - self.eta * g, WX, G), self.eta)
         return SimpleState(X, state.aux, ostate, state.k + 1)
@@ -87,9 +87,9 @@ class PGExtra(Baseline):
     aux = (z, x_prev, g_prev).  This is the P2D2-class composite baseline."""
     name: str = "pg_extra"
 
-    def _half_mix(self, X):
+    def _half_mix(self, X, k=None):
         # (I + W)/2 X
-        return tmap(lambda x, wx: 0.5 * (x + wx), X, self.mixer(X))
+        return tmap(lambda x, wx: 0.5 * (x + wx), X, self.mixer(X, k))
 
     def init(self, X0, key):
         ostate = self.oracle.init(X0)
@@ -101,8 +101,8 @@ class PGExtra(Baseline):
     def step(self, state, key):
         Z, Xprev, Gprev = state.aux
         G, ostate = self.oracle.sample(state.X, state.oracle, key)
-        WX = self.mixer(state.X)
-        halfXprev = self._half_mix(Xprev)
+        WX = self.mixer(state.X, state.k)
+        halfXprev = self._half_mix(Xprev, state.k)
         Znew = tmap(lambda z, wx, hx, g, gp: z + wx - hx - self.eta * (g - gp),
                     Z, WX, halfXprev, G, Gprev)
         Xnew = self.prox.tree_call(Znew, self.eta)
@@ -118,9 +118,9 @@ class NIDSIndependent(Baseline):
     aux = (z, x_prev, g_prev)."""
     name: str = "nids"
 
-    def _tilde_mix(self, Y):
+    def _tilde_mix(self, Y, k=None):
         # (I - (I - W)/2) Y = (I + W)/2 Y
-        return tmap(lambda y, wy: 0.5 * (y + wy), Y, self.mixer(Y))
+        return tmap(lambda y, wy: 0.5 * (y + wy), Y, self.mixer(Y, k))
 
     def init(self, X0, key):
         ostate = self.oracle.init(X0)
@@ -134,7 +134,8 @@ class NIDSIndependent(Baseline):
         G, ostate = self.oracle.sample(state.X, state.oracle, key)
         Y = tmap(lambda x, xp, g, gp: 2 * x - xp - self.eta * (g - gp),
                  state.X, Xprev, G, Gprev)
-        Znew = tmap(lambda z, x, my: z - x + my, Z, state.X, self._tilde_mix(Y))
+        Znew = tmap(lambda z, x, my: z - x + my, Z, state.X,
+                    self._tilde_mix(Y, state.k))
         Xnew = self.prox.tree_call(Znew, self.eta)
         return SimpleState(Xnew, (Znew, state.X, G), ostate, state.k + 1)
 
@@ -163,7 +164,7 @@ class ChocoSGD(Baseline):
         q = (diff if isinstance(self.compressor, Identity)
              else self.compressor.tree_call(diff, k_c))
         xhat = tmap(lambda h, qq: h + qq, state.aux, q)
-        Wxhat = self.mixer(xhat)
+        Wxhat = self.mixer(xhat, state.k)
         X = tmap(lambda xp, wxh, xh: xp + self.gamma_c * (wxh - xh),
                  Xp, Wxhat, xhat)
         return SimpleState(X, xhat, ostate, state.k + 1)
@@ -198,7 +199,8 @@ class LessBit(Baseline):
              else self.compressor.tree_call(diff, k_c))
         xhat = tmap(lambda hh, qq: hh + qq, h, q)
         h = tmap(lambda hh, xh: (1 - self.alpha) * hh + self.alpha * xh, h, xhat)
-        lap = tmap(lambda xh, wxh: xh - wxh, xhat, self.mixer(xhat))  # (I-W) xhat
+        lap = tmap(lambda xh, wxh: xh - wxh, xhat,
+                   self.mixer(xhat, state.k))  # (I-W) xhat
         d = tmap(lambda dd, l: dd + self.theta / 2.0 * l, d, lap)
         return SimpleState(X, (d, h), ostate, state.k + 1)
 

@@ -45,9 +45,35 @@ class CommState(NamedTuple):
 # ---------------------------------------------------------------------------
 
 class Mixer:
-    """mix(X) computes W X along the node dimension."""
+    """mix(X[, k]) computes W_k X along the node dimension.
 
-    def __call__(self, X):
+    ``k`` is the (possibly traced) iteration index.  Time-varying backends
+    (repro.netsim) select W_k from a materialized schedule and draw fault
+    masks from it; the static backends below ignore it.
+
+    Time-varying/faulty mixers set ``recompute_hw = True``: the incremental
+    recursion Hw + W Q only tracks W H for a *static* W, so COMM instead
+    recomputes Zhat_w = W_k (H + Q) from the receiver-side H replicas each
+    round (mathematically identical for static W).  Such mixers also expose
+    ``send_mask`` (per-node send failures — stragglers) and ``comm_mix``
+    (the faulty-channel Zhat_w for one leaf)."""
+
+    #: True -> COMM uses comm_mix/send_mask instead of the Hw recursion.
+    recompute_hw: bool = False
+
+    def __call__(self, X, k=None):
+        raise NotImplementedError
+
+    def send_mask(self, k=None):
+        """(n,) {0,1} mask of nodes whose send succeeds this round, or
+        None.  A failed sender's Q is dropped everywhere — receivers AND its
+        own H update — so sender and replica state stay consistent."""
+        return None
+
+    def comm_mix(self, h, q, k=None, leaf_idx=0):
+        """Zhat_w for one leaf: W_k applied to (h + q) through the faulty
+        channel (edge drops renormalized, wire noise on q).  Only required
+        when ``recompute_hw``."""
         raise NotImplementedError
 
 
@@ -73,7 +99,7 @@ class DenseMixer(Mixer):
     """W X via einsum over an explicit leading node axis (GSPMD backend)."""
     W: Any  # (n, n) array-like
 
-    def __call__(self, X):
+    def __call__(self, X, k=None):
         def mix_leaf(leaf):
             acc_dtype = leaf.dtype if leaf.dtype == jnp.float64 else jnp.float32
             W = _exact_stochastic(np.asarray(self.W), acc_dtype)
@@ -100,7 +126,7 @@ class RingMixer(Mixer):
     def _perm(self, shift):
         return [(i, (i + shift) % self.n) for i in range(self.n)]
 
-    def __call__(self, X):
+    def __call__(self, X, k=None):
         def mix_leaf(leaf):
             right = jax.lax.ppermute(leaf, self.axis_name, self._perm(+1))
             left = jax.lax.ppermute(leaf, self.axis_name, self._perm(-1))
@@ -114,8 +140,11 @@ class RingMixer(Mixer):
 # ---------------------------------------------------------------------------
 
 def comm(Z, state: CommState, alpha: float, compressor: Compressor,
-         key: Optional[jax.Array], mixer: Mixer):
+         key: Optional[jax.Array], mixer: Mixer, step_idx=None):
     """One COMM round.  Z, state leaves share structure.
+
+    ``step_idx`` is forwarded to the mixer so time-varying backends select
+    the right W_k (static mixers ignore it).
 
     Returns (Zhat, Zhat_w, new_state).
     """
@@ -129,15 +158,27 @@ def comm(Z, state: CommState, alpha: float, compressor: Compressor,
     else:
         keys = [None] * n_leaf
 
+    recompute = getattr(mixer, "recompute_hw", False)
+    send = mixer.send_mask(step_idx) if recompute else None
+
     zhat, zhat_w, newH, newHw = [], [], [], []
-    for z, h, hw, k in zip(leaves_Z, leaves_H, leaves_Hw, keys):
+    for j, (z, h, hw, k) in enumerate(zip(leaves_Z, leaves_H, leaves_Hw,
+                                          keys)):
         diff = z - h
         if isinstance(compressor, Identity):
             q = diff
         else:
             q = compressor(diff, k)          # dequantized Q(diff)
+        if send is not None:
+            # straggler skipped its send: its Q is dropped everywhere (wire
+            # AND its own H update), so replicas stay consistent and the
+            # receiver falls back on H — the paper's error compensation
+            # folds the miss into the next round's difference.
+            q = q * send.astype(q.dtype).reshape(
+                send.shape + (1,) * (q.ndim - 1))
         zh = h + q
-        zw = hw + _mix_single(mixer, q)
+        zw = (mixer.comm_mix(h, q, step_idx, j) if recompute
+              else hw + _mix_single(mixer, q, step_idx))
         zhat.append(zh)
         zhat_w.append(zw)
         newH.append((1 - alpha) * h + alpha * zh)
@@ -147,11 +188,11 @@ def comm(Z, state: CommState, alpha: float, compressor: Compressor,
     return unf(zhat), unf(zhat_w), CommState(unf(newH), unf(newHw))
 
 
-def _mix_single(mixer: Mixer, leaf):
+def _mix_single(mixer: Mixer, leaf, step_idx=None):
     # Mixer API is pytree-based; wrap single leaves.
-    return mixer((leaf,))[0]
+    return mixer((leaf,), step_idx)[0]
 
 
-def init_comm_state(H1, mixer: Mixer) -> CommState:
+def init_comm_state(H1, mixer: Mixer, step_idx=None) -> CommState:
     """Line 1 of Algorithm 1: Hw^1 = W H^1 (one uncompressed warm-up mix)."""
-    return CommState(H1, mixer(H1))
+    return CommState(H1, mixer(H1, step_idx))

@@ -94,7 +94,8 @@ class ProxLEAD:
         Z = jax.tree_util.tree_map(
             lambda x, g, d: x - eta * g - eta * d, state.X, G, state.D)     # line 6
         Zhat, Zhat_w, cstate = comm(
-            Z, state.comm, alpha, self.compressor, k_c, self.mixer)         # line 7
+            Z, state.comm, alpha, self.compressor, k_c, self.mixer,
+            step_idx=state.k)                                               # line 7
         diff = jax.tree_util.tree_map(lambda a, b: a - b, Zhat, Zhat_w)
         D = jax.tree_util.tree_map(
             lambda d, df: d + gamma / (2 * eta) * df, state.D, diff)        # line 8

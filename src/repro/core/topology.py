@@ -122,6 +122,32 @@ def torus2d(rows: int, cols: int) -> Topology:
     return Topology("torus2d", W, _neighbors_from_W(W))
 
 
+def exponential(n: int) -> Topology:
+    """Exponential graph: node i connects to i +/- 2^j mod n, uniform weights.
+
+    The classic small-diameter gossip graph (log2(n) hops); pairs with
+    ``ring`` in alternating schedules (repro.netsim) to model a network that
+    switches between a cheap sparse round and a well-connected round.
+    """
+    if n <= 2:
+        return ring(n)
+    A = np.zeros((n, n))
+    s = 1
+    while s < n:                  # all offsets 2^j < n (i+2^j covers i-2^j)
+        for i in range(n):
+            j = (i + s) % n
+            A[i, j] = A[j, i] = 1.0
+        s *= 2
+    deg = A.sum(1)
+    W = np.zeros_like(A)
+    for i in range(n):
+        for j in range(n):
+            if A[i, j]:
+                W[i, j] = 1.0 / (1 + max(deg[i], deg[j]))
+        W[i, i] = 1.0 - W[i].sum()
+    return Topology("exponential", W, _neighbors_from_W(W))
+
+
 def expander(n: int, degree: int = 4, seed: int = 0) -> Topology:
     """Random regular-ish expander with Metropolis weights (deterministic)."""
     rng = np.random.default_rng(seed)
@@ -160,4 +186,6 @@ def make_topology(name: str, n: int, **kw) -> Topology:
         return torus2d(rows, n // rows)
     if name == "expander":
         return expander(n, **kw)
+    if name == "exponential":
+        return exponential(n)
     raise ValueError(f"unknown topology {name!r}")

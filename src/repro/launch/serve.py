@@ -10,6 +10,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.models import transformer as TR
@@ -67,8 +68,7 @@ def main(argv=None):
     toks = args.batch * args.gen
     print(f"arch={args.arch} generated {out.shape} in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s incl. compile)")
-    print("sample:", np.array2string(jax.device_get(out[0, :24]))
-          if (np := __import__("numpy")) else out[0, :24])
+    print("sample:", np.array2string(jax.device_get(out[0, :24])))
     return out
 
 

@@ -1,0 +1,33 @@
+"""repro.netsim — time-varying topology & fault-injection simulation engine.
+
+Turns the static-topology Prox-LEAD stack into a scenario engine: per-
+iteration mixing matrices (:mod:`~repro.netsim.schedule`), composable
+communication faults (:mod:`~repro.netsim.faults`), a jitted ``lax.scan``
+driver with exact bits-on-wire accounting (:mod:`~repro.netsim.engine`), and
+trajectory containers (:mod:`~repro.netsim.metrics`).
+
+CLI: ``PYTHONPATH=src python -m repro.launch.simulate --help``.
+"""
+from repro.netsim.engine import SimMixer, simulate
+from repro.netsim.faults import (FaultModel, LinkDrop, NoisyChannel,
+                                 Straggler, apply_edge_mask, effective_C,
+                                 make_fault, make_faults, mean_edge_survival)
+from repro.netsim.metrics import (Trajectory, consensus_error,
+                                  effective_bits_per_iter,
+                                  payload_bits_per_node)
+from repro.netsim.schedule import (ScheduledMixer, TopologySchedule,
+                                   alternating_schedule, make_schedule,
+                                   markov_drop_schedule,
+                                   random_matching_schedule, static_schedule)
+
+__all__ = [
+    "SimMixer", "simulate",
+    "FaultModel", "LinkDrop", "NoisyChannel", "Straggler",
+    "apply_edge_mask", "effective_C", "make_fault", "make_faults",
+    "mean_edge_survival",
+    "Trajectory", "consensus_error", "effective_bits_per_iter",
+    "payload_bits_per_node",
+    "ScheduledMixer", "TopologySchedule", "alternating_schedule",
+    "make_schedule", "markov_drop_schedule", "random_matching_schedule",
+    "static_schedule",
+]

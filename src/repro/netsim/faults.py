@@ -1,0 +1,176 @@
+"""Composable fault models applied at the COMM boundary.
+
+Faults act on what a gossip round actually puts on the wire: which links
+carry a payload (an edge mask folded into W_k), which nodes manage to send
+at all (a per-node send mask), and the payload values themselves (bounded
+wire noise).  Link-level masking is symmetric and the dropped weight moves
+onto both endpoints' diagonal (``apply_edge_mask``), so the effective mixing
+matrix stays Assumption-1 compliant every round.
+
+* ``Straggler`` — a node skips its send for the round.  At the COMM
+  boundary this is a *send mask*: the straggler's Q is dropped everywhere —
+  on the wire and in its own H update — so sender and receiver replicas stay
+  consistent and every receiver falls back on its H state for that node,
+  which is exactly the paper's implicit error compensation (the miss folds
+  into the next round's difference Z - H).  For raw-iterate gossip
+  (baselines mixing X directly) the same draw isolates the node in W_k.
+* ``LinkDrop`` — each edge independently loses its payload this round; the
+  edge is renormalized out of W_k (weight onto both diagonals).
+* ``NoisyChannel`` — mean-zero noise bounded by sigma * ||q_i||_inf on the
+  wire payload (broadcast channel: all receivers see the same corruption).
+  Unbiased, so it composes with the compressor's Assumption-2 constant —
+  see ``effective_C``.
+
+Randomness derives from ``fold_in(base_key, k)`` inside the jitted step, so
+fault draws are reproducible and the metrics pass re-derives exactly which
+directed edges carried a payload at any iteration (exact bits-on-wire).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class FaultModel:
+    """Base: no-op fault.  Subclasses override any of the hooks below."""
+    name: str = "fault"
+    #: True -> at the COMM boundary this fault acts through ``send_mask``
+    #: (its ``edge_mask`` is only for raw-iterate gossip).
+    comm_via_send: bool = False
+
+    def edge_mask(self, key, n: int):
+        """(n, n) symmetric {0,1} mask of links alive this round (diagonal
+        always 1), or None for 'no link masking'."""
+        return None
+
+    def send_mask(self, key, n: int):
+        """(n,) {0,1} mask of nodes whose send succeeds, or None."""
+        return None
+
+    def payload(self, q, key):
+        """Corrupt the wire payload of one leaf (leading node dim)."""
+        return q
+
+    def mean_edge_survival(self) -> float:
+        """Expected fraction of directed edges carrying a payload."""
+        return 1.0
+
+    def effective_C(self, C: float, dim: int) -> float:
+        """Assumption-2 constant of (this fault ∘ compressor-with-C)."""
+        return C
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDrop(FaultModel):
+    """Each edge independently drops its payload with probability ``rate``;
+    the row/column of W_k renormalizes via the diagonal."""
+    rate: float = 0.1
+    name: str = "linkdrop"
+
+    def edge_mask(self, key, n):
+        u = jax.random.uniform(key, (n, n))
+        u = jnp.triu(u, 1)
+        u = u + u.T                                   # symmetric draw per edge
+        keep = (u >= self.rate).astype(jnp.float32)
+        return jnp.where(jnp.eye(n, dtype=bool), 1.0, keep)
+
+    def mean_edge_survival(self):
+        return 1.0 - self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler(FaultModel):
+    """Each node independently skips its send with probability ``rate``.
+
+    COMM boundary: acts via ``send_mask`` (receivers reuse H, weights
+    untouched).  Raw-iterate gossip: the same Bernoulli draw isolates the
+    node in W_k (all its links renormalized out for the round)."""
+    rate: float = 0.1
+    name: str = "straggler"
+    comm_via_send: bool = True
+
+    def _slow(self, key, n):
+        return jax.random.bernoulli(key, self.rate, (n,))
+
+    def send_mask(self, key, n):
+        return (~self._slow(key, n)).astype(jnp.float32)
+
+    def edge_mask(self, key, n):
+        slow = self._slow(key, n)                     # same draw as send_mask
+        alive = (~(slow[:, None] | slow[None, :])).astype(jnp.float32)
+        return jnp.where(jnp.eye(n, dtype=bool), 1.0, alive)
+
+    def mean_edge_survival(self):
+        return 1.0 - self.rate                        # sender-side failures
+
+
+@dataclasses.dataclass(frozen=True)
+class NoisyChannel(FaultModel):
+    """Mean-zero noise bounded by sigma * ||q_i||_inf on node i's payload.
+
+    Uniform on [-amp, amp] per element — unbiased, so Prox-LEAD's theory
+    degrades gracefully through a larger Assumption-2 constant instead of
+    picking up bias."""
+    sigma: float = 0.01
+    name: str = "noise"
+
+    def payload(self, q, key):
+        axes = tuple(range(1, q.ndim))
+        amp = self.sigma * jnp.max(jnp.abs(q), axis=axes, keepdims=True)
+        noise = jax.random.uniform(key, q.shape, q.dtype, -1.0, 1.0)
+        return q + amp * noise
+
+    def effective_C(self, C, dim):
+        # E||Q(x)+xi - x||^2 = C||x||^2 + E||xi||^2 (xi independent,
+        # mean zero).  Per element Var(xi) = (sigma ||q||_inf)^2 / 3 and
+        # ||q||_inf <= 2 ||x||_inf <= 2 ||x||_2 for any Assumption-2
+        # quantizer with per-block scale <= ||x||_inf, so
+        # E||xi||^2 <= (4/3) dim sigma^2 ||x||^2.  (Conservative.)
+        return C + 4.0 * dim * self.sigma ** 2 / 3.0
+
+
+def apply_edge_mask(W, mask):
+    """Drop masked edges of W and move their weight onto both endpoints'
+    diagonal.  Preserves symmetry and double stochasticity exactly (row sums
+    are untouched), so the renormalized W_k still satisfies Assumption 1."""
+    n = W.shape[-1]
+    eye = jnp.eye(n, dtype=W.dtype)
+    off = W * (1.0 - eye)
+    kept = off * mask.astype(W.dtype)
+    corr = jnp.sum(off - kept, axis=1)
+    return kept + jnp.diag(jnp.diagonal(W) + corr)
+
+
+def effective_C(faults: Sequence[FaultModel], C: float, dim: int) -> float:
+    """Assumption-2 constant of the faulty channel stacked on a compressor."""
+    for f in faults:
+        C = f.effective_C(C, dim)
+    return C
+
+
+def mean_edge_survival(faults: Sequence[FaultModel]) -> float:
+    frac = 1.0
+    for f in faults:
+        frac *= f.mean_edge_survival()
+    return frac
+
+
+def make_fault(spec: str) -> FaultModel:
+    """Parse 'name[:param]' — e.g. 'linkdrop:0.1', 'straggler:0.05',
+    'noise:0.01'."""
+    name, _, arg = spec.partition(":")
+    table = {"linkdrop": (LinkDrop, "rate"),
+             "straggler": (Straggler, "rate"),
+             "noise": (NoisyChannel, "sigma")}
+    if name not in table:
+        raise ValueError(f"unknown fault {name!r}; have {sorted(table)}")
+    cls, field = table[name]
+    return cls(**({field: float(arg)} if arg else {}))
+
+
+def make_faults(specs: str) -> tuple:
+    """Comma-separated fault specs -> tuple of FaultModel ('' -> ())."""
+    return tuple(make_fault(s) for s in specs.split(",") if s.strip())

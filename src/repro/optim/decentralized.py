@@ -52,6 +52,14 @@ class TrainerConfig:
     prox: Optional[Prox] = None     # shared non-smooth regularizer
     topology: str = "ring"
     backend: str = "dense"          # dense | ring
+    # netsim scenario knobs (dense backend only): a time-varying topology
+    # schedule and/or per-round link-drop fault injection
+    schedule: str = "static"        # static | alternating | random_matching
+    #                               # | markov_drop
+    schedule_rounds: int = 32       # T_cycle for the randomized schedules
+    schedule_drop: float = 0.0      # markov_drop rate (schedule-level)
+    drop_rate: float = 0.0          # i.i.d. LinkDrop fault rate
+    fault_seed: int = 0
     pack_mode: str = "lastdim"      # lastdim | flat (§Perf iteration 2)
     scales_bf16: bool = False       # §Perf iteration 3
     shard_aligned_blocks: bool = False  # §Perf iteration 4: block | shard
@@ -86,9 +94,26 @@ class DecentralizedTrainer:
         else:
             self.compressor = QInf(bits=tcfg.bits, block=tcfg.block)
         self.prox = tcfg.prox or NoneProx()
-        self.mixer = DenseMixer(self.topo.W)
+        self.mixer = self._build_mixer()
         self.alg = ProxLEAD(tcfg.eta, tcfg.alpha, tcfg.gamma, self.compressor,
                             self.prox, self.mixer, oracle=None)  # type: ignore
+
+    def _build_mixer(self):
+        tcfg = self.tcfg
+        scenario = tcfg.schedule != "static" or tcfg.drop_rate > 0
+        if not scenario:
+            return DenseMixer(self.topo.W)
+        if tcfg.backend == "ring":
+            raise ValueError("netsim schedules/faults need backend='dense' "
+                             "(the ring ppermute path is static-topology)")
+        from repro.netsim import LinkDrop, SimMixer, make_schedule
+        kw = ({"drop": tcfg.schedule_drop}
+              if tcfg.schedule == "markov_drop" else {})
+        sched = make_schedule(tcfg.schedule, tcfg.n_nodes,
+                              base=tcfg.topology, rounds=tcfg.schedule_rounds,
+                              seed=tcfg.seed, **kw)
+        faults = (LinkDrop(tcfg.drop_rate),) if tcfg.drop_rate > 0 else ()
+        return SimMixer(sched, faults, jax.random.key(tcfg.fault_seed))
 
     # ------------------------------------------------------------------ init
     def init_state(self, key) -> TrainState:

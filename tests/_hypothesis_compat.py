@@ -1,0 +1,66 @@
+"""Tiny deterministic fallback for ``hypothesis`` (optional test dep).
+
+When hypothesis is unavailable, ``@given`` runs the test body over
+``max_examples`` pseudo-random draws from a fixed-seed generator instead of
+skipping the property tests entirely.  Supports exactly the strategy subset
+this repo uses: integers, floats, sampled_from, lists.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings is applied on top of this wrapper, so read the
+            # attribute off the wrapper itself at call time
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*args, *(s.draw(rng) for s in strats), **kwargs)
+        # hide the strategy-filled params from pytest's fixture resolution
+        # (real hypothesis does the same)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature([])
+        return wrapper
+    return deco

@@ -38,6 +38,43 @@ def ridge_problem(n=8, m=5, bs=4, p=20, lam2=0.1, het=0.3, noise=0.01, seed=0):
     return prob, xstar, lam2, max(Ls), jnp.zeros((n, p))
 
 
+def logreg_problem(n=8, m=5, bs=4, p=10, ncls=3, lam2=0.1, seed=0):
+    """Miniature of the paper's experiment: non-iid l2-regularized
+    multinomial logistic regression (strongly convex).  Reference optimum
+    via long centralized gradient descent.
+
+    Returns (problem, xstar (p, ncls), mu, L, X0 (n, p, ncls))."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(ncls, p)) * 2.0
+    labels = rng.integers(0, ncls, size=n * m * bs)
+    A = protos[labels] + rng.normal(size=(n * m * bs, p))
+    A = A / np.linalg.norm(A, axis=1, keepdims=True)
+    order = np.argsort(labels, kind="stable")        # label-sorted: non-iid
+    A, labels = A[order], labels[order]
+    A = A.reshape(n, m, bs, p)
+    Y = np.eye(ncls)[labels].reshape(n, m, bs, ncls)
+    data = {"A": jnp.array(A), "Y": jnp.array(Y)}
+
+    def loss_batch(x, batch):
+        logp = jax.nn.log_softmax(batch["A"] @ x, axis=-1)
+        ce = -jnp.mean(jnp.sum(batch["Y"] * logp, axis=-1))
+        return ce + lam2 * jnp.sum(x ** 2)
+
+    prob = oracles.FiniteSumProblem(jax.grad(loss_batch), data, n, m,
+                                    loss_batch)
+
+    mu = 2 * lam2
+    L = 0.5 + 2 * lam2                # rows normalized: softmax bound + reg
+
+    def body(x, _):
+        G = prob.full_grad(jnp.broadcast_to(x, (n, p, ncls)))
+        return x - (1.0 / L) * G.mean(0), ()
+
+    xstar, _ = jax.lax.scan(body, jnp.zeros((p, ncls), jnp.float64), None,
+                            length=4000)
+    return prob, np.asarray(xstar), mu, L, jnp.zeros((n, p, ncls))
+
+
 def lasso_problem(n=8, m=5, bs=4, p=20, lam1=0.05, lam2=0.1, seed=0):
     """Ridge smooth part + shared L1 regularizer (composite).  The optimum is
     computed by running a long centralized proximal gradient descent."""

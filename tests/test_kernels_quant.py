@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # optional dep: fall back to
+    from tests._hypothesis_compat import (  # deterministic shim
+        given, settings, strategies as st)
 
 from repro.kernels import ops as kops
 from repro.kernels import quantize as qk

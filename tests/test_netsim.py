@@ -1,0 +1,238 @@
+"""netsim: schedules, fault models, engine invariants, robustness.
+
+The two load-bearing guarantees:
+  * static schedule, no faults == the existing DenseMixer path bit-for-bit
+  * Prox-LEAD still converges to the exact optimum under 10% link drop
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import netsim
+from repro.core import compression as C
+from repro.core import oracles, prox_lead
+from repro.core import baselines as B
+from repro.core import topology as T
+from repro.core.comm import DenseMixer
+from tests.problems import logreg_problem, ridge_problem
+
+
+@pytest.fixture(scope="module")
+def ridge():
+    return ridge_problem()
+
+
+@pytest.fixture(scope="module")
+def logreg():
+    return logreg_problem()
+
+
+def _subopt(state, xstar):
+    Xs = jnp.broadcast_to(jnp.asarray(xstar), state.X.shape)
+    return float(jnp.sum((state.X - Xs) ** 2))
+
+
+def _lead(prob, L, mixer, bits=2, block=64):
+    return prox_lead.lead(1 / (2 * L), 0.5, 0.5, C.QInf(bits=bits, block=block),
+                          mixer, oracles.FullGradient(prob))
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+class TestSchedules:
+    @pytest.mark.parametrize("name", ["static", "alternating",
+                                      "random_matching", "markov_drop"])
+    def test_assumption1_every_step(self, name):
+        kw = {"drop": 0.3, "sticky": 0.5} if name == "markov_drop" else {}
+        s = netsim.make_schedule(name, 8, **kw)
+        s.validate()          # symmetric, doubly stochastic, lambda_n > -1
+
+    def test_markov_drop_rate0_stack_equals_static(self):
+        topo = T.ring(8)
+        md = netsim.markov_drop_schedule(topo, drop=0.0, rounds=16)
+        for t in range(md.T_cycle):
+            np.testing.assert_array_equal(md.W_stack[t], topo.W)
+
+    def test_joint_spectral_gap_static_matches_spectrum(self):
+        topo = T.ring(8)
+        s = netsim.static_schedule(topo)
+        lam = np.sort(np.abs(np.linalg.eigvalsh(topo.W)))[-2]
+        assert s.joint_spectral_gap() == pytest.approx(1.0 - lam, abs=1e-10)
+
+    def test_random_matching_connects_over_cycle(self):
+        s = netsim.random_matching_schedule(8, rounds=32)
+        assert s.joint_spectral_gap() > 0.5   # single round is disconnected
+
+    def test_unknown_schedule_raises(self):
+        with pytest.raises(ValueError):
+            netsim.make_schedule("nope", 8)
+
+
+# ---------------------------------------------------------------------------
+# faults
+# ---------------------------------------------------------------------------
+
+class TestFaults:
+    def test_edge_mask_renormalization_keeps_assumption1(self):
+        W = jnp.asarray(T.expander(8).W)
+        for seed in range(5):
+            mask = netsim.LinkDrop(0.5).edge_mask(jax.random.key(seed), 8)
+            We = netsim.apply_edge_mask(W, mask)
+            np.testing.assert_allclose(np.asarray(We), np.asarray(We).T,
+                                       atol=1e-15)
+            np.testing.assert_allclose(np.asarray(We).sum(1), 1.0, atol=1e-12)
+            assert np.linalg.eigvalsh(np.asarray(We)).min() > -1 + 1e-9
+
+    def test_straggler_send_and_edge_views_consistent(self):
+        f = netsim.Straggler(0.5)
+        key = jax.random.key(3)
+        send = np.asarray(f.send_mask(key, 8))
+        edge = np.asarray(f.edge_mask(key, 8))
+        slow = send == 0.0
+        for i in range(8):
+            for j in range(8):
+                if i != j:
+                    assert edge[i, j] == (0.0 if slow[i] or slow[j] else 1.0)
+
+    def test_noise_effective_C_composes(self):
+        q = C.QInf(bits=2)
+        faults = (netsim.NoisyChannel(0.05),)
+        Ce = netsim.effective_C(faults, q.C, dim=100)
+        assert Ce > q.C
+        assert netsim.effective_C((), q.C, dim=100) == q.C
+
+    def test_mean_edge_survival(self):
+        faults = netsim.make_faults("linkdrop:0.1,straggler:0.2")
+        assert netsim.mean_edge_survival(faults) == pytest.approx(0.9 * 0.8)
+
+    def test_make_fault_parse_and_reject(self):
+        assert netsim.make_fault("linkdrop:0.3") == netsim.LinkDrop(0.3)
+        assert netsim.make_faults("") == ()
+        with pytest.raises(ValueError):
+            netsim.make_fault("gremlin:1")
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class TestEngine:
+    def test_static_schedule_bit_for_bit_vs_dense_mixer(self, ridge):
+        """Acceptance (a): SimMixer(static) reproduces the DenseMixer
+        trajectory exactly — same keys, bitwise-equal state."""
+        prob, xstar, mu, L, X0 = ridge
+        topo = T.ring(prob.n)
+        a_ref = _lead(prob, L, DenseMixer(topo.W))
+        a_sim = dataclasses.replace(
+            a_ref, mixer=netsim.SimMixer(netsim.static_schedule(topo)))
+        keys = jax.random.split(jax.random.key(0), 31)
+        s_ref = a_ref.init(X0, keys[0])
+        s_sim = a_sim.init(X0, keys[0])
+        step_ref, step_sim = jax.jit(a_ref.step), jax.jit(a_sim.step)
+        for kk in keys[1:]:
+            s_ref = step_ref(s_ref, kk)
+            s_sim = step_sim(s_sim, kk)
+        for a, b in ((s_ref.X, s_sim.X), (s_ref.D, s_sim.D),
+                     (s_ref.comm.H, s_sim.comm.H),
+                     (s_ref.comm.Hw, s_sim.comm.Hw)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_markov_drop_rate0_equals_static(self, ridge):
+        """Acceptance (b): a zero-rate markov_drop schedule is
+        indistinguishable from static — bit-for-bit."""
+        prob, xstar, mu, L, X0 = ridge
+        topo = T.ring(prob.n)
+        st = netsim.static_schedule(topo)
+        md = netsim.markov_drop_schedule(topo, drop=0.0, rounds=16)
+        alg = _lead(prob, L, DenseMixer(topo.W))
+        f1, t1 = netsim.simulate(alg, st, X0=X0, steps=30)
+        f2, t2 = netsim.simulate(alg, md, X0=X0, steps=30)
+        np.testing.assert_array_equal(np.asarray(f1.X), np.asarray(f2.X))
+        np.testing.assert_array_equal(t1.bits, t2.bits)
+
+    def test_prox_lead_converges_under_10pct_linkdrop(self, logreg):
+        """Acceptance (d): exact convergence under 10% link drop on the
+        logistic-regression problem (2-bit compression)."""
+        prob, xstar, mu, L, X0 = logreg
+        topo = T.ring(prob.n)
+        alg = _lead(prob, L, DenseMixer(topo.W), block=30)
+        final, traj = netsim.simulate(
+            alg, netsim.static_schedule(topo), (netsim.LinkDrop(0.1),),
+            X0=X0, steps=400)
+        assert _subopt(final, xstar) < 1e-10
+        assert traj.consensus[-1] < 1e-12
+        # dropped links transmitted nothing: strictly fewer wire bits
+        directed = int((np.abs(topo.W) > 1e-12).sum() - prob.n)
+        full = 400 * directed * traj.meta["bits_per_edge_per_round"]
+        assert 0 < traj.total_bits < full
+
+    def test_straggler_and_random_matching_converge(self, ridge):
+        prob, xstar, mu, L, X0 = ridge
+        alg = _lead(prob, L, DenseMixer(T.ring(prob.n).W))
+        f1, _ = netsim.simulate(alg, netsim.static_schedule(T.ring(prob.n)),
+                                (netsim.Straggler(0.1),), X0=X0, steps=600)
+        assert _subopt(f1, xstar) < 1e-10
+        f2, _ = netsim.simulate(alg,
+                                netsim.random_matching_schedule(prob.n),
+                                X0=X0, steps=600)
+        assert _subopt(f2, xstar) < 1e-10
+
+    def test_noise_converges_to_neighborhood(self, ridge):
+        prob, xstar, mu, L, X0 = ridge
+        alg = _lead(prob, L, DenseMixer(T.ring(prob.n).W))
+        final, _ = netsim.simulate(alg, netsim.static_schedule(T.ring(prob.n)),
+                                   (netsim.NoisyChannel(0.01),),
+                                   X0=X0, steps=600)
+        so = _subopt(final, xstar)
+        assert so < 1.0          # init suboptimality is > 100
+
+    def test_bits_accounting_exact(self, ridge):
+        prob, xstar, mu, L, X0 = ridge
+        topo = T.ring(prob.n)
+        alg = _lead(prob, L, DenseMixer(topo.W))
+        q = C.QInf(bits=2, block=64)
+        per_edge = q.payload_bits(X0.shape[1:])
+        directed = int((np.abs(topo.W) > 1e-12).sum() - prob.n)
+        # clean: every directed edge carries a payload every round
+        _, t_clean = netsim.simulate(alg, netsim.static_schedule(topo),
+                                     X0=X0, steps=50)
+        np.testing.assert_array_equal(t_clean.bits,
+                                      np.full(50, per_edge * directed))
+        # 100% drop: nothing on the wire
+        _, t_dead = netsim.simulate(alg, netsim.static_schedule(topo),
+                                    (netsim.LinkDrop(1.0),), X0=X0, steps=10)
+        assert t_dead.total_bits == 0.0
+        # 30% drop: strictly between, matches the mask stream exactly
+        _, t_drop = netsim.simulate(alg, netsim.static_schedule(topo),
+                                    (netsim.LinkDrop(0.3),), X0=X0, steps=50)
+        assert 0.0 < t_drop.total_bits < t_clean.total_bits
+        assert all(b % per_edge == 0 for b in t_drop.bits)
+
+    def test_baseline_under_engine(self, ridge):
+        """Engine wraps baselines too (raw-iterate gossip semantics)."""
+        prob, xstar, mu, L, X0 = ridge
+        alg = B.NIDSIndependent(eta=1 / (2 * L),
+                                mixer=DenseMixer(T.ring(prob.n).W),
+                                oracle=oracles.FullGradient(prob))
+        final, traj = netsim.simulate(
+            alg, netsim.static_schedule(T.ring(prob.n)),
+            (netsim.LinkDrop(0.05),), X0=X0, steps=600)
+        assert _subopt(final, xstar) < 1e-6
+        assert np.isfinite(traj.consensus).all()
+
+    def test_trajectory_json_roundtrip(self, ridge, tmp_path):
+        prob, xstar, mu, L, X0 = ridge
+        alg = _lead(prob, L, DenseMixer(T.ring(prob.n).W))
+        _, traj = netsim.simulate(alg, netsim.static_schedule(T.ring(prob.n)),
+                                  X0=X0, steps=10)
+        import json
+        p = tmp_path / "traj.json"
+        traj.to_json(p, full=True)
+        rec = json.loads(p.read_text())
+        assert rec["steps"] == 10
+        assert len(rec["trajectory"]["bits"]) == 10

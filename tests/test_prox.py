@@ -2,7 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # optional dep: fall back to
+    from tests._hypothesis_compat import (  # deterministic shim
+        given, settings, strategies as st)
 
 from repro.core import prox as P
 
