@@ -1,11 +1,16 @@
 # One-command gates for every PR.
 PY ?= python
 
-.PHONY: test bench-smoke lint
+.PHONY: test bench-smoke lint ci
 
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# full PR gate: tier-1 + benchmark smoke (emits BENCH_netsim.json /
+# BENCH_comm.json at the repo root so the bench trajectory accumulates)
+ci: test
+	PYTHONPATH=src:. $(PY) -m benchmarks.run --smoke
 
 # netsim robustness benchmark at tiny sizes (fast sanity sweep)
 bench-smoke:

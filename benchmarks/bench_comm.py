@@ -12,6 +12,7 @@ from repro.core import compression as C
 from repro.core import topology as T
 from repro.netsim import faults as nf
 from repro.netsim import metrics as nm
+from repro.netsim.schedule import make_schedule
 
 DIM = 784 * 10
 N_NODES = 8
@@ -54,10 +55,51 @@ def run(verbose: bool = False):
                   f"{eff / 1e6:7.3f} Mbit/iter "
                   f"(survival {nf.mean_edge_survival(faults):.2f})")
 
-    # dense vs ring gossip wire bytes from the dry-run JSONs (if present)
+    # sharded neighbor-gossip bits per round, per topology, from the
+    # compiled ExchangePlan (one ppermute per hop, every union pair carries
+    # its payload).  Two bases: ``bits`` is the ideal b-bit payload
+    # (QInf.payload_bits); ``wire_bits`` is what the lowered HLO's
+    # collective-permutes physically move — (b+1)-bit offset codes
+    # nibble/byte-packed plus byte-cast f32 scales (qinf_wire_bits; the
+    # number asserted byte-exact against the HLO parse in
+    # tests/test_dryrun_small.py::TestNeighborBackend).
+    per_edge = q2.payload_bits((DIM,))
+    per_edge_wire = nm.qinf_wire_bits((DIM,), bits=2, block=q2.block)
+    ring_bits = None
+    for tname in ("ring", "exponential", "torus2d"):
+        topo = T.make_topology(tname, N_NODES)
+        plan = T.compile_plan(topo.W, name=tname)
+        bits = nm.plan_bits_per_round(plan, per_edge)
+        wire = nm.plan_bits_per_round(plan, per_edge_wire)
+        if tname == "ring":
+            ring_bits = bits
+        f32_round = plan.pairs_per_round * DIM * 32
+        rows.append({"name": f"neighbor_qinf2[{tname}]",
+                     "bits_per_iter": int(bits),
+                     "wire_bits_per_iter": int(wire),
+                     "saving_vs_f32": round(f32_round / bits, 2),
+                     "wire_saving_vs_f32": round(f32_round / wire, 2),
+                     "hops": len(plan.hops),
+                     "vs_ring": round(bits / ring_bits, 2)})
+        if verbose:
+            print(f"  neighbor {tname:12s} {len(plan.hops)} hops "
+                  f"{wire / 1e6:7.3f} Mbit/round on the wire "
+                  f"({bits / ring_bits:.2f}x ring, "
+                  f"{f32_round / wire:.1f}x under f32)")
+    # a time-varying schedule moves its union support every round
+    sched = make_schedule("alternating", N_NODES)
+    plan = T.compile_plan(sched.W_stack, name=sched.name)
+    rows.append({"name": "neighbor_qinf2[alternating]",
+                 "bits_per_iter": int(nm.plan_bits_per_round(plan, per_edge)),
+                 "wire_bits_per_iter": int(
+                     nm.plan_bits_per_round(plan, per_edge_wire)),
+                 "hops": len(plan.hops),
+                 "active_pairs_per_round": plan.active_pairs().tolist()})
+
+    # dense vs sharded gossip wire bytes from the dry-run JSONs (if present)
     d = pathlib.Path("experiments/dryrun")
     if d.exists():
-        for backend in ("dense", "ring"):
+        for backend in ("dense", "ring", "neighbor"):
             f = d / f"qwen3-1.7b__train_4k__1pod__{backend}.json"
             if f.exists():
                 rec = json.loads(f.read_text())
@@ -81,7 +123,18 @@ def validate(rows):
                by["network_qinf2[linkdrop:0.1,straggler:0.1]"]
                ["edge_survival"] == round(0.9 * 0.9, 3),
                by["network_qinf2[linkdrop:0.1,straggler:0.1]"]
-               ["edge_survival"])]
+               ["edge_survival"]),
+              ("exponential/ring gossip bits ratio == degree ratio (5/2)",
+               by["neighbor_qinf2[exponential]"]["vs_ring"] == 2.5,
+               by["neighbor_qinf2[exponential]"]["vs_ring"]),
+              ("neighbor gossip beats f32 >10x (ideal 2-bit payload) and "
+               ">6x on the u8 wire, on every graph",
+               all(by[f"neighbor_qinf2[{t}]"]["saving_vs_f32"] > 10
+                   and by[f"neighbor_qinf2[{t}]"]["wire_saving_vs_f32"] > 6
+                   for t in ("ring", "exponential", "torus2d")),
+               {t: (by[f"neighbor_qinf2[{t}]"]["saving_vs_f32"],
+                    by[f"neighbor_qinf2[{t}]"]["wire_saving_vs_f32"])
+                for t in ("ring", "exponential", "torus2d")})]
     if ("gossip_dense_qwen3_train4k" in by
             and "gossip_ring_qwen3_train4k" in by):
         dn = by["gossip_dense_qwen3_train4k"]["coll_gb_per_step"]

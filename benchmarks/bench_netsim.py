@@ -57,7 +57,10 @@ def run(steps: int = 400, verbose: bool = False):
     sched = netsim.static_schedule(topo)
     rows = []
     for bits in BITS:
-        comp = C.Identity() if bits == 32 else C.QInf(bits=bits, block=64)
+        # block == problem dim: one quantization block per row, so the
+        # padded-payload accounting (payload_bits) carries zero padding
+        comp = (C.Identity() if bits == 32
+                else C.QInf(bits=bits, block=int(X0.shape[-1])))
         gamma = 1.0 if bits == 32 else 0.5
         alg = prox_lead.lead(1 / (2 * L), 0.5, gamma, comp,
                              DenseMixer(topo.W), oracles.FullGradient(prob))

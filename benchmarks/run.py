@@ -22,15 +22,26 @@ jax.config.update("jax_enable_x64", True)
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=800)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="iteration count (default 800; 200 with --quick, "
+                         "60 with --smoke — an explicit value wins)")
     ap.add_argument("--quick", action="store_true",
                     help="reduced iteration counts (CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="make-ci gate: tiny comm+netsim sweep, writes "
+                         "BENCH_comm.json / BENCH_netsim.json at repo root "
+                         "so the bench trajectory accumulates per PR")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,table3,kernels,"
                          "comm,ablations,netsim")
     ap.add_argument("--json-out", default="experiments/bench_results.json")
     args = ap.parse_args(argv)
-    steps = 200 if args.quick else args.steps
+    if args.smoke and args.only is None:
+        args.only = "comm,netsim"
+    if args.steps is not None:
+        steps = args.steps
+    else:
+        steps = 60 if args.smoke else 200 if args.quick else 800
 
     from benchmarks import (ablations, bench_comm, bench_kernels,
                             bench_netsim, fig1_smooth, fig2_nonsmooth,
@@ -94,6 +105,18 @@ def main(argv=None):
          "checks": [{"suite": k, "claim": c, "ok": bool(o), "detail": str(d)}
                     for k, c, o, d in all_checks]}, indent=1, default=str))
     print("results written to", out)
+    if args.smoke:
+        # per-suite trajectory files at the repo root (one per PR gate)
+        for key in ("netsim", "comm"):
+            if key not in all_rows:
+                continue
+            p = pathlib.Path(f"BENCH_{key}.json")
+            p.write_text(json.dumps(
+                {"suite": key, "steps": steps, "rows": all_rows[key],
+                 "checks": [{"claim": c, "ok": bool(o), "detail": str(d)}
+                            for k, c, o, d in all_checks if k == key]},
+                indent=1, default=str))
+            print("smoke trajectory written to", p)
     return 1 if n_fail else 0
 
 

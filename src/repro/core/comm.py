@@ -18,9 +18,16 @@ Two mixing backends implement ``W Q``:
   quantization payload* with the two ring neighbours via
   ``jax.lax.ppermute`` and dequantize on the receiver.  Collective bytes are
   the wire payload (b-bit codes + scales), not dequantized floats.  Only
-  valid for uniform-weight rings, which is exactly the production topology.
+  valid for uniform-weight rings.
+* ``NeighborMixer`` — generalizes the ring exchange to ANY static sparse
+  topology (and finite time-varying schedule cycles) through a compiled
+  :class:`repro.core.topology.ExchangePlan`: one exchange hop per circulant
+  offset / edge color, per-receiver per-round weight tables.  This class is
+  the plan's dense reference; the wire-honest shard_map twin (packed u8
+  payloads, one ppermute per hop) is ``repro.optim.decentralized``'s
+  ``_sharded_update``, parity-tested against it.
 
-Both backends compute mathematically identical Zhat_w for a ring W (the
+All backends compute mathematically identical Zhat_w for a shared W (the
 dequantization is deterministic given the payload), which is tested.
 """
 from __future__ import annotations
@@ -131,6 +138,69 @@ class RingMixer(Mixer):
             right = jax.lax.ppermute(leaf, self.axis_name, self._perm(+1))
             left = jax.lax.ppermute(leaf, self.axis_name, self._perm(-1))
             return self.w_self * leaf + self.w_nb * (right + left)
+
+        return jax.tree_util.tree_map(mix_leaf, X)
+
+
+@dataclasses.dataclass(frozen=True)
+class NeighborMixer(Mixer):
+    """W_k X through a compiled ExchangePlan — ring, exponential graph,
+    torus, matchings, any static sparse topology or finite schedule cycle.
+
+    This class is the plan's *dense reference semantics* (standard Mixer
+    contract: stacked (n, ...) leaves, hop-by-hop gather + per-receiver
+    per-round weight), against which the production path is parity-tested.
+    The production gossip — per-hop ppermute of packed u8 payloads inside
+    shard_map — lives in ``repro.optim.decentralized._sharded_update``,
+    which consumes the same plan."""
+    plan: Any                       # repro.core.topology.ExchangePlan
+
+    @property
+    def recompute_hw(self) -> bool:
+        # time-varying plans invalidate the static incremental Hw
+        # recursion; tell comm() to recompute Zhat_w = W_k (H + Q)
+        return self.plan.T > 1
+
+    def _round_idx(self, k):
+        if self.plan.T == 1:
+            return jnp.int32(0)
+        if k is None:
+            raise ValueError(
+                f"plan {self.plan.name!r} is time-varying (T="
+                f"{self.plan.T}); pass the round index k — silently using "
+                "round 0 would mix with the wrong W_k")
+        return jnp.asarray(k, jnp.int32) % self.plan.T
+
+    def __call__(self, X, k=None):
+        return self.mix_stacked(X, k)
+
+    def comm_mix(self, h, q, k=None, leaf_idx=0):
+        """Zhat_w for one leaf under a time-varying plan (see Mixer)."""
+        return self.mix_stacked((h + q,), k)[0]
+
+    def mix_stacked(self, X, k=None):
+        """Apply the plan to stacked (n, ...) leaves with gathers standing
+        in for the ppermutes (no mesh needed)."""
+        t = self._round_idx(k)
+        w_self = jnp.asarray(self.plan.self_weights(np.float32))[t]
+
+        def mix_leaf(leaf):
+            acc_dtype = leaf.dtype if leaf.dtype == jnp.float64 else jnp.float32
+            x = leaf.astype(acc_dtype)
+            bshape = (self.plan.n,) + (1,) * (leaf.ndim - 1)
+            acc = w_self.astype(acc_dtype).reshape(bshape) * x
+            for hop in self.plan.hops:
+                w = jnp.asarray(hop.weights, np.float32)[t]
+                gets = np.zeros(self.plan.n, np.int64)
+                mask = np.zeros(self.plan.n, np.float64)   # dst receives?
+                for (s, d) in hop.pairs:
+                    gets[d] = s
+                    mask[d] = 1.0
+                recv = x[jnp.asarray(gets)]
+                gate = (w.astype(acc_dtype)
+                        * jnp.asarray(mask, acc_dtype)).reshape(bshape)
+                acc = acc + gate * recv
+            return acc.astype(leaf.dtype)
 
         return jax.tree_util.tree_map(mix_leaf, X)
 

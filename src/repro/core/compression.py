@@ -136,10 +136,17 @@ class QInf(Compressor):
             block=self.block)
 
     def payload_bits(self, shape, dtype=jnp.float32):
-        n = int(np.prod(shape))
-        nblocks = -(-n // self.block)
-        # b bits per element (sign+magnitude code) + one f32 scale per block.
-        return n * self.bits + nblocks * 32
+        # ``qinf_quantize_lastdim`` blocks along the LAST axis of each row
+        # independently (rank-generic, sharding-preserving), so a ragged
+        # last dim pads to ceil(D/block) blocks PER ROW — not per flattened
+        # tensor.  b bits per (padded) code + one f32 scale per block,
+        # matching codes.size / scales.size of the actual payload.
+        if not shape:
+            shape = (1,)
+        rows = (int(np.prod(shape[:-1], dtype=np.int64))
+                if len(shape) > 1 else 1)
+        nblocks = rows * -(-int(shape[-1]) // self.block)
+        return nblocks * (self.block * self.bits + 32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,6 +29,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro import configs  # noqa: E402
 from repro.configs import shapes as shp  # noqa: E402
 from repro.launch import mesh as mesh_mod  # noqa: E402
@@ -51,24 +52,24 @@ def _ns(mesh, spec_tree):
 
 def lower_train(cfg, shape, mesh, backend="dense", bits=2,
                 pack_mode="lastdim", scales_bf16=False,
-                shard_aligned_blocks=False):
+                shard_aligned_blocks=False, topology="ring"):
     N = mesh_mod.n_nodes(mesh)
     naxes = node_axes(mesh)
     tcfg = TrainerConfig(n_nodes=N, compressor="qinf", bits=bits,
                          backend=backend, pack_mode=pack_mode,
-                         scales_bf16=scales_bf16,
+                         scales_bf16=scales_bf16, topology=topology,
                          shard_aligned_blocks=shard_aligned_blocks)
     tr = DecentralizedTrainer(cfg, tcfg, mesh=mesh)
     state = tr.abstract_state()
     batch = shp.train_input_specs(cfg, shape, N)
     state_specs = tr.state_specs(naxes)
     batch_specs = tr.batch_specs(batch, naxes)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(
             tr.train_step,
             in_shardings=(_ns(mesh, state_specs), _ns(mesh, batch_specs)),
         ).lower(state, batch)
-    return lowered
+    return lowered, tr
 
 
 # ---------------------------------------------------------------------------
@@ -107,7 +108,7 @@ def lower_serve(cfg, shape, mesh):
             logits, _, _ = TR.forward(cfg, p, b, mode="train")
             return logits[:, -1]
 
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             return jax.jit(prefill, in_shardings=(p_shard, _ns(mesh, bspec))
                            ).lower(params, batch)
 
@@ -122,7 +123,7 @@ def lower_serve(cfg, shape, mesh):
     def serve_step(p, c, toks, pos):
         return TR.decode_step(cfg, p, c, toks, pos)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jax.jit(
             serve_step,
             in_shardings=(p_shard, _ns(mesh, cache_specs),
@@ -138,16 +139,17 @@ def lower_serve(cfg, shape, mesh):
 def run_one(arch: str, shape_name: str, *, multi_pod=False, backend="dense",
             out_dir="experiments/dryrun", verbose=True, bits=2,
             pack_mode="lastdim", scales_bf16=False, tag=None,
-            shard_aligned_blocks=False, cfg_overrides=None):
+            shard_aligned_blocks=False, cfg_overrides=None, topology="ring"):
     cfg = dataclasses.replace(configs.get(arch), dtype=jnp.bfloat16,
                               **(cfg_overrides or {}))
     shape = shp.SHAPES[shape_name]
     skip = shp.applicable(cfg, shape)
     mesh_tag = "2pod" if multi_pod else "1pod"
-    variant = tag or backend
+    variant = tag or (backend if topology == "ring"
+                      else f"{backend}-{topology}")
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
            "backend": backend, "variant": variant, "bits": bits,
-           "pack_mode": pack_mode, "status": None}
+           "topology": topology, "pack_mode": pack_mode, "status": None}
     out_path = pathlib.Path(out_dir)
     out_path.mkdir(parents=True, exist_ok=True)
     fname = out_path / f"{arch}__{shape_name}__{mesh_tag}__{variant}.json"
@@ -163,11 +165,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod=False, backend="dense",
     chips = mesh_mod.n_chips(mesh)
     t0 = time.time()
     try:
+        tr = None
         if shape.kind == "train":
-            lowered = lower_train(cfg, shape, mesh, backend=backend,
-                                  bits=bits, pack_mode=pack_mode,
-                                  scales_bf16=scales_bf16,
-                                  shard_aligned_blocks=shard_aligned_blocks)
+            lowered, tr = lower_train(
+                cfg, shape, mesh, backend=backend, bits=bits,
+                pack_mode=pack_mode, scales_bf16=scales_bf16,
+                shard_aligned_blocks=shard_aligned_blocks, topology=topology)
         else:
             lowered = lower_serve(cfg, shape, mesh)
         t_lower = time.time() - t0
@@ -194,6 +197,18 @@ def run_one(arch: str, shape_name: str, *, multi_pod=False, backend="dense",
             },
             "roofline": rl.as_dict(),
         })
+        if tr is not None and getattr(tr, "plan", None) is not None:
+            # exact gossip bits-on-wire per round from the compiled plan
+            from repro.netsim import metrics as nmetrics
+            per_edge = nmetrics.sharded_payload_bits(
+                tr, jax.tree_util.tree_leaves(tr.abstract_state().plead.X))
+            rec["gossip"] = {
+                "plan": tr.plan.name, "hops": len(tr.plan.hops),
+                "pairs_per_round": tr.plan.pairs_per_round,
+                "payload_bits_per_edge": per_edge,
+                "bits_per_round": nmetrics.plan_bits_per_round(
+                    tr.plan, per_edge),
+            }
         if verbose:
             print(f"[dryrun] OK {arch} x {shape_name} x {mesh_tag} "
                   f"({backend}): lower {t_lower:.0f}s compile {t_compile:.0f}s "
@@ -217,7 +232,11 @@ def main(argv=None):
     ap.add_argument("--shape", default="all")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--backend", default="dense", choices=["dense", "ring"])
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "ring", "neighbor"])
+    ap.add_argument("--topology", default="ring",
+                    help="gossip graph (neighbor backend): ring | "
+                         "exponential | torus2d | star | expander")
     ap.add_argument("--bits", type=int, default=2)
     ap.add_argument("--pack-mode", default="lastdim",
                     choices=["lastdim", "flat"])
@@ -236,7 +255,8 @@ def main(argv=None):
                 rec = run_one(a, s, multi_pod=mp, backend=args.backend,
                               bits=args.bits, pack_mode=args.pack_mode,
                               shard_aligned_blocks=args.shard_aligned_blocks,
-                              tag=args.tag, out_dir=args.out)
+                              tag=args.tag, out_dir=args.out,
+                              topology=args.topology)
                 n_fail += rec["status"] == "error"
     sys.exit(1 if n_fail else 0)
 

@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e: one pod = 256 chips as (data=16, model=16); two pods add a
@@ -18,9 +20,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {ndev} devices, have {len(devices)} — the dry-run sets "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return compat.make_mesh(shape, axes, devices=devices)
 
 
 def n_nodes(mesh) -> int:

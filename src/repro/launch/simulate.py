@@ -14,6 +14,7 @@ Compressors: qinf:BITS | randk:FRAC | identity
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -139,6 +140,11 @@ def main(argv=None):
     schedule.validate()
     faults = faults_mod.make_faults(args.fault)
     compressor = make_compressor(args.compressor)
+    if isinstance(compressor, C.QInf) and shape[-1] < compressor.block:
+        # blockwise quantization runs along the last axis; cap the block at
+        # the iterate's last dim so the wire payload carries no padding
+        # (payload_bits counts the padded codes actually produced)
+        compressor = dataclasses.replace(compressor, block=int(shape[-1]))
     prox = proxmod.L1(lam=args.l1) if args.l1 > 0 else proxmod.NoneProx()
     oracle = oracles.make_oracle(args.oracle, problem)
     placeholder = DenseMixer(topo_mod.make_topology(args.topology, n).W)

@@ -64,9 +64,11 @@ def main(argv=None):
     for t in range(args.steps):
         state, metrics = step_fn(state, data.batch_at(t))
         if bits_per_step is None:
-            n_el = sum(l.size for l in jax.tree_util.tree_leaves(state.plead.X))
-            bits_per_step = trainer.compressor.payload_bits(
-                (n_el,)) if hasattr(trainer.compressor, "payload_bits") else 0
+            # per-leaf accounting: payload_bits blocks along each leaf's
+            # last dim (incl. padding), so a flattened total undercounts
+            from repro.netsim.metrics import payload_bits_per_node
+            bits_per_step = payload_bits_per_node(
+                trainer.compressor, state.plead.X)
         if t % args.log_every == 0 or t == args.steps - 1:
             print(f"step {t:5d}  loss {float(metrics['loss']):.4f}  "
                   f"consensus {float(metrics['consensus']):.3e}  "

@@ -25,13 +25,37 @@ def node_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in names)
 
 
+def model_axis_size(mesh) -> int:
+    """Tensor-parallel ways on this mesh (1 when there is no model axis)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def spec_mentions(spec: P, axis: str) -> bool:
+    """Does any dim entry of ``spec`` name mesh axis ``axis``?"""
+    for e in spec:
+        if axis in (e if isinstance(e, tuple) else (e,)):
+            return True
+    return False
+
+
+def model_local_shape(shape, spec: P, model: int):
+    """Per-model-shard shape of a leaf: divide each dim whose spec entry
+    names the model axis (``spec`` aligns with ``shape``'s dims)."""
+    local = []
+    for d, dim in enumerate(shape):
+        e = spec[d] if d < len(spec) else None
+        sharded = "model" in (e if isinstance(e, tuple) else (e,))
+        local.append(dim // model if sharded else dim)
+    return tuple(local)
+
+
 def constrain(x, spec: Optional[P]):
     """with_sharding_constraint if a concrete mesh is active, else no-op."""
     if spec is None:
         return x
     try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or not mesh.shape_tuple:
+        from repro import compat
+        if compat.current_mesh() is None:
             return x
         return jax.lax.with_sharding_constraint(x, spec)
     except Exception:

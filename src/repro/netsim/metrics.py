@@ -53,6 +53,82 @@ def effective_bits_per_iter(compressor: Optional[Compressor], shape,
     return per_edge * n_directed_edges * mean_edge_survival(faults)
 
 
+# ---------------------------------------------------------------------------
+# Exchange-plan accounting (sharded neighbor backend)
+# ---------------------------------------------------------------------------
+
+def plan_bits_per_round(plan, payload_bits_per_edge: int) -> int:
+    """Exact wire bits one gossip round of a compiled ExchangePlan moves:
+    every union-support pair carries its payload every round (time-varying
+    weights gate the *mixing*, not the send)."""
+    return plan.pairs_per_round * payload_bits_per_edge
+
+
+def plan_active_bits(plan, payload_bits_per_edge: int) -> np.ndarray:
+    """(T,) wire bits per round counting only pairs with nonzero mixing
+    weight — the dense netsim engine's accounting convention, for
+    comparison against :func:`plan_bits_per_round`."""
+    return plan.active_pairs() * payload_bits_per_edge
+
+
+def qinf_wire_bits(shape, bits: int, block: int, scale_bits: int = 32) -> int:
+    """u8 wire bits for one last-dim-quantized tensor: nibble/byte-packed
+    codes — (b+1)-bit offset codes rounded to 4 or 8 bits, including block
+    padding — plus byte-cast scales.  This is what the sharded backend's
+    collective-permutes physically move (bigger than ``QInf.payload_bits``,
+    which counts ideal b-bit packing)."""
+    from repro.kernels.ops import wire_bits_per_element
+    if not shape:
+        shape = (1,)
+    rows = int(np.prod(shape[:-1], dtype=np.int64)) if len(shape) > 1 else 1
+    nb = -(-int(shape[-1]) // block)
+    return rows * nb * (block * wire_bits_per_element(bits) + scale_bits)
+
+
+def sharded_payload_bits(trainer, leaves) -> int:
+    """Exact bits ONE directed edge carries per hop on the sharded neighbor
+    backend: packed u8 codes (incl. block padding) plus byte-cast scales,
+    summed over state leaves.
+
+    ``leaves`` are stacked (N, ...) leaves (arrays or ShapeDtypeStructs) in
+    ``plead.X`` order; the per-edge payload is the per-node slice.
+
+    Under the jax 0.4.x full-manual fallback a node spans model_size
+    devices and each device ppermutes its LOCAL arrays: leaves whose last
+    dim is model-sharded quantize (and pad) per slice, every other leaf is
+    ppermuted redundantly by all model_size devices — the physical edge
+    payload is model_size x the per-device bytes (which is what the HLO's
+    collective-permutes show, per device)."""
+    from repro import compat
+    from repro.core.compression import Identity
+    tcfg = trainer.tcfg
+    identity = isinstance(trainer.compressor, Identity)
+    scale_bits = 16 if tcfg.scales_bf16 else 32
+    model = 1
+    locals_ = [l.shape[1:] for l in leaves]      # per-node leaf shapes
+    if not compat.HAS_SHARD_MAP and trainer.mesh is not None:
+        from repro.models.sharding import model_axis_size
+        model = model_axis_size(trainer.mesh)
+        if model > 1:
+            from jax.sharding import PartitionSpec as P
+            from repro.models import transformer as TR
+            from repro.models.sharding import model_local_shape, param_specs
+            specs = jax.tree_util.tree_leaves(
+                param_specs(TR.abstract_params(trainer.mcfg)),
+                is_leaf=lambda s: isinstance(s, P))
+            locals_ = [model_local_shape(shape, sp, model)
+                       for shape, sp in zip(locals_, specs)]
+    per_device = 0
+    for l, local in zip(leaves, locals_):
+        if identity:                 # raw floats, no blocking/padding
+            per_device += (int(np.prod(local, dtype=np.int64))
+                           * jnp.dtype(l.dtype).itemsize * 8)
+        else:
+            blk = trainer._quant_block((1,) + local)
+            per_device += qinf_wire_bits(local, tcfg.bits, blk, scale_bits)
+    return model * per_device
+
+
 @dataclasses.dataclass
 class Trajectory:
     """Per-iteration record of a netsim run (numpy, host-side)."""

@@ -4,13 +4,31 @@ State layout: every parameter leaf gains a leading node dim N — node i's
 replica.  The forward/backward is vmapped over N (GSPMD shards it over the
 node mesh axes); the Prox-LEAD update then gossips with compression.
 
-Two gossip backends:
-  dense — paper-faithful: W X as a tensordot over the node dim (GSPMD turns
-          it into all-gathers).  Works for any topology.
-  ring  — TPU-native (beyond-paper, §Perf): the COMM exchange runs inside
-          shard_map over the node axes, ppermuting the PACKED b-bit payload
-          (codes + scales) to the two ring neighbours.  Collective bytes on
-          the wire are the compressed payload, not dequantized floats.
+Gossip backends:
+  dense    — paper-faithful: W X as a tensordot over the node dim (GSPMD
+             turns it into all-gathers).  Works for any topology, any
+             netsim schedule, and fault injection — but ships dequantized
+             floats.
+  neighbor — wire-honest (beyond-paper, §Perf): the COMM exchange runs
+             inside shard_map over the node axes, ppermuting the PACKED
+             b-bit payload (u8 codes + byte-cast scales) once per hop of a
+             compiled ExchangePlan — ring, exponential graph, torus,
+             matchings, any static sparse topology, and finite time-varying
+             schedule cycles.  Collective bytes on the wire are the
+             compressed payload, not dequantized floats.
+  ring     — alias of neighbor kept for older configs/CLIs (with the
+             default ring topology it compiles to the same two-hop plan the
+             original ring-only backend hand-coded).
+
+Time-varying schedules on the neighbor backend: payloads move over the
+UNION support every round (a static hop set); per-round weight tables gate
+the mixing.  Because the incremental recursion Hw + W Q only tracks W H for
+a static W, the sharded state keeps one Hw slot per schedule round t
+(leaf shape (N, T, ...)): Hw[t] tracks W_t H exactly via
+Hw[t] += alpha * W_t Q — computable locally since every union neighbor's Q
+arrives every round — and round k reads slot k % T.  This is the
+distributed equivalent of netsim's dense-side Zhat_w = W_k (H + Q)
+recomputation (memory cost: T state copies; netsim keeps T small).
 
 The first trainer step folds Algorithm 1's warm-up (lines 1-3) into the
 k=1 update with H^1 = 0, D^1 = 0 — identical fixed point, one less special
@@ -27,9 +45,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import topology as topo_mod
 from repro.core.comm import CommState, DenseMixer, comm, init_comm_state
-from repro.core.compression import Compressor, Identity, QInf
+from repro.core.compression import Compressor, Identity, make_compressor
 from repro.core.prox import NoneProx, Prox
 from repro.core.prox_lead import ProxLEAD, ProxLEADState
 from repro.core.oracles import OracleState
@@ -46,14 +65,17 @@ class TrainerConfig:
     eta: float = 1e-2
     alpha: float = 0.5
     gamma: float = 1.0
-    compressor: str = "qinf"        # identity | qinf
+    compressor: str = "qinf"        # identity | qinf | randk | topk
     bits: int = 2
     block: int = 256
+    frac: float = 0.1               # randk / topk kept fraction
+    allow_biased: bool = False      # opt-in for biased compressors (topk)
     prox: Optional[Prox] = None     # shared non-smooth regularizer
     topology: str = "ring"
-    backend: str = "dense"          # dense | ring
-    # netsim scenario knobs (dense backend only): a time-varying topology
-    # schedule and/or per-round link-drop fault injection
+    backend: str = "dense"          # dense | neighbor | ring (alias)
+    # netsim scenario knobs: time-varying topology schedules run on BOTH
+    # the dense and the neighbor (sharded compressed) backend; per-round
+    # fault injection (drop_rate) is dense-only
     schedule: str = "static"        # static | alternating | random_matching
     #                               # | markov_drop
     schedule_rounds: int = 32       # T_cycle for the randomized schedules
@@ -89,31 +111,77 @@ class DecentralizedTrainer:
         self.tcfg = tcfg
         self.mesh = mesh
         self.topo = topo_mod.make_topology(tcfg.topology, tcfg.n_nodes)
-        if tcfg.compressor == "identity":
-            self.compressor: Compressor = Identity()
-        else:
-            self.compressor = QInf(bits=tcfg.bits, block=tcfg.block)
+        kw = {"qinf": {"bits": tcfg.bits, "block": tcfg.block},
+              "randk": {"frac": tcfg.frac}, "topk": {"frac": tcfg.frac},
+              }.get(tcfg.compressor, {})
+        self.compressor: Compressor = make_compressor(tcfg.compressor, **kw)
         self.prox = tcfg.prox or NoneProx()
+        self.plan: Optional[topo_mod.ExchangePlan] = None
         self.mixer = self._build_mixer()
+        # ProxLEAD.__post_init__ enforces Assumption 2 (rejects biased
+        # compressors unless explicitly allowed) for every backend.
         self.alg = ProxLEAD(tcfg.eta, tcfg.alpha, tcfg.gamma, self.compressor,
-                            self.prox, self.mixer, oracle=None)  # type: ignore
+                            self.prox, self.mixer, oracle=None,  # type: ignore
+                            allow_biased=tcfg.allow_biased)
+
+    @property
+    def sharded(self) -> bool:
+        return self.tcfg.backend in ("ring", "neighbor")
+
+    def _schedule(self):
+        tcfg = self.tcfg
+        from repro.netsim import make_schedule
+        kw = ({"drop": tcfg.schedule_drop}
+              if tcfg.schedule == "markov_drop" else {})
+        return make_schedule(tcfg.schedule, tcfg.n_nodes,
+                             base=tcfg.topology, rounds=tcfg.schedule_rounds,
+                             seed=tcfg.seed, **kw)
 
     def _build_mixer(self):
         tcfg = self.tcfg
+        if self.sharded:
+            if tcfg.drop_rate > 0:
+                raise ValueError(
+                    "netsim fault injection (drop_rate) needs "
+                    "backend='dense'; the sharded neighbor path covers "
+                    "time-varying schedules but not per-round edge faults")
+            if tcfg.compressor not in ("identity", "qinf"):
+                raise ValueError(
+                    f"the sharded neighbor backend packs QInf payloads; "
+                    f"compressor {tcfg.compressor!r} needs backend='dense'")
+            if tcfg.schedule != "static":
+                sched = self._schedule()
+                self.plan = topo_mod.compile_plan(sched.W_stack,
+                                                  name=sched.name)
+                if self.plan.T > 8:
+                    import warnings
+                    warnings.warn(
+                        f"neighbor backend keeps one Hw slot per schedule "
+                        f"round: T={self.plan.T} multiplies the Hw state "
+                        f"{self.plan.T}x (leaf (N, T, ...)).  Lower "
+                        f"schedule_rounds or use backend='dense' if this "
+                        f"does not fit memory.", stacklevel=2)
+            else:
+                self.plan = topo_mod.compile_plan(self.topo.W,
+                                                  name=self.topo.name)
+            # the dense mixer below backs self.alg, which the sharded path
+            # never invokes; keep the static W so init/debug paths work.
+            return DenseMixer(self.topo.W)
         scenario = tcfg.schedule != "static" or tcfg.drop_rate > 0
         if not scenario:
             return DenseMixer(self.topo.W)
-        if tcfg.backend == "ring":
-            raise ValueError("netsim schedules/faults need backend='dense' "
-                             "(the ring ppermute path is static-topology)")
-        from repro.netsim import LinkDrop, SimMixer, make_schedule
-        kw = ({"drop": tcfg.schedule_drop}
-              if tcfg.schedule == "markov_drop" else {})
-        sched = make_schedule(tcfg.schedule, tcfg.n_nodes,
-                              base=tcfg.topology, rounds=tcfg.schedule_rounds,
-                              seed=tcfg.seed, **kw)
+        from repro.netsim import LinkDrop, SimMixer
+        sched = self._schedule()
         faults = (LinkDrop(tcfg.drop_rate),) if tcfg.drop_rate > 0 else ()
         return SimMixer(sched, faults, jax.random.key(tcfg.fault_seed))
+
+    @property
+    def _hw_T(self) -> Optional[int]:
+        """Hw schedule-slot count for the sharded backend (None -> plain
+        Hw with the same leaf shapes as H)."""
+        if self.sharded and self.plan is not None and self.plan.T > 1:
+            return self.plan.T
+        return None
 
     # ------------------------------------------------------------------ init
     def init_state(self, key) -> TrainState:
@@ -124,7 +192,13 @@ class DecentralizedTrainer:
 
     def state_from_stacked(self, X) -> TrainState:
         zeros = tmap(jnp.zeros_like, X)
-        cstate = CommState(zeros, tmap(jnp.zeros_like, X))  # W @ 0 == 0
+        T = self._hw_T
+        if T is None:
+            hw0 = tmap(jnp.zeros_like, X)                    # W @ 0 == 0
+        else:  # one Hw slot per schedule round: leaf (N, T, ...)
+            hw0 = tmap(lambda p: jnp.zeros(
+                (p.shape[0], T) + p.shape[1:], p.dtype), X)
+        cstate = CommState(zeros, hw0)
         plead = ProxLEADState(X, tmap(jnp.zeros_like, X), cstate,
                               OracleState(jnp.int32(0), jnp.int32(0),
                                           jnp.int32(0)), jnp.int32(1))
@@ -138,7 +212,11 @@ class DecentralizedTrainer:
         ap = TR.abstract_params(self.mcfg)
         X = tmap(lambda s: jax.ShapeDtypeStruct((N,) + s.shape, s.dtype), ap)
         zeros = X
-        cstate = CommState(zeros, zeros)
+        T = self._hw_T
+        hw0 = (zeros if T is None else
+               tmap(lambda s: jax.ShapeDtypeStruct(
+                   (s.shape[0], T) + s.shape[1:], s.dtype), X))
+        cstate = CommState(zeros, hw0)
         plead = ProxLEADState(X, zeros, cstate,
                               OracleState(*(jax.ShapeDtypeStruct((), jnp.int32),) * 3),
                               jax.ShapeDtypeStruct((), jnp.int32))
@@ -146,12 +224,20 @@ class DecentralizedTrainer:
                    else jax.ShapeDtypeStruct((), jnp.int32))
         return TrainState(plead, jax.ShapeDtypeStruct((), jnp.int32), precond)
 
+    @staticmethod
+    def _hw_specs(specs):
+        """Insert the replicated T slot dim after the node dim of ``specs``
+        (the Hw leaf layout for a time-varying plan)."""
+        return tmap(lambda s: P(s[0], None, *s[1:]), specs,
+                    is_leaf=lambda x: isinstance(x, P))
+
     def state_specs(self, node_axes: Tuple[str, ...]):
         """PartitionSpec pytree matching abstract_state()."""
         ap = TR.abstract_params(self.mcfg)
         ps = param_specs(ap, prepend=(node_axes,))
         scalar = P()
-        plead = ProxLEADState(ps, ps, CommState(ps, ps),
+        hw_ps = ps if self._hw_T is None else self._hw_specs(ps)
+        plead = ProxLEADState(ps, ps, CommState(ps, hw_ps),
                               OracleState(scalar, scalar, scalar), scalar)
         precond = ((ps, ps) if self.tcfg.precondition == "adam" else scalar)
         return TrainState(plead, scalar, precond)
@@ -182,8 +268,8 @@ class DecentralizedTrainer:
         if self.tcfg.precondition == "adam":
             G, precond = self._adam_precondition(G, precond, state.step)
         key = jax.random.fold_in(jax.random.key(self.tcfg.seed), state.step)
-        if self.tcfg.backend == "ring":
-            plead = self._ring_update(state.plead, G, key)
+        if self.sharded:
+            plead = self._sharded_update(state.plead, G, key)
         else:
             plead = self.alg.update(state.plead, G, key)
         Xm = plead.X
@@ -209,32 +295,94 @@ class DecentralizedTrainer:
         Gp = tmap(lambda mm, vv: (mm * c1) / (jnp.sqrt(vv * c2) + eps), m, v)
         return Gp, (m, v)
 
-    # ------------------------------------------------- ring (shard_map) path
-    def _ring_update(self, plead: ProxLEADState, G, key) -> ProxLEADState:
-        """Lines 6-10 with the COMM exchange ppermuting packed payloads.
+    # -------------------------------------------- neighbor (shard_map) path
+    def _quant_block(self, diff_shape) -> int:
+        """Quantization block size, optionally aligned to the model shard.
 
-        Runs inside shard_map over the node axes; the model axis stays
-        auto (GSPMD).  Requires a concrete mesh."""
-        assert self.mesh is not None, "ring backend needs a mesh"
+        ``diff_shape`` is the leaf as the quantizer sees it: the full
+        per-node leaf under partial-manual shard_map (model axis auto), the
+        model-LOCAL slice under the 0.4.x full-manual fallback — in the
+        latter case the slice is already shard-aligned, so no further
+        division by tp_ways applies."""
         tcfg = self.tcfg
+        blk = tcfg.block
+        ld_cap = diff_shape[-1]
+        if ld_cap % 2 == 0 and ld_cap < blk:
+            # never pad a row past its own width: a (model-local) last dim
+            # below the block size would otherwise ship a full padded block
+            # per row on every ppermute (nibble packing needs even blocks,
+            # so odd widths keep the padded block)
+            blk = ld_cap
+        if tcfg.shard_aligned_blocks:
+            # align quantization blocks to the model-shard boundary: the
+            # (.., nb, blk) reshape then never crosses shards, so no gather
+            # is induced.  Still a valid Assumption-2 blockwise quantizer
+            # (smaller blocks -> slightly more scales, smaller C).
+            ld = diff_shape[-1]
+            if compat.HAS_SHARD_MAP and ld % tcfg.tp_ways == 0:
+                shard = ld // tcfg.tp_ways
+            else:
+                shard = ld
+            # largest EVEN divisor (nibble packing pairs the last axis);
+            # odd shards fall back to pairing-safe 2
+            evens = [d for d in range(2, min(tcfg.block, shard) + 1, 2)
+                     if shard % d == 0]
+            blk = max(evens) if evens else 2
+        return blk
+
+    def _sharded_update(self, plead: ProxLEADState, G, key) -> ProxLEADState:
+        """Lines 6-10 with the COMM exchange ppermuting packed payloads once
+        per hop of the compiled ExchangePlan.
+
+        Runs inside shard_map over the node axes; the model axis stays auto
+        (GSPMD).  Requires a concrete mesh.  Every wire payload is u8: the
+        packed codes natively, the per-block scales via bitcast — so the
+        lowered HLO's collective-permutes are exactly the bits the paper
+        counts.  For schedules (T > 1), Hw carries one slot per round
+        (see module docstring) and Q moves over the union support."""
+        assert self.mesh is not None, "neighbor backend needs a mesh"
+        assert self.plan is not None
+        tcfg = self.tcfg
+        plan = self.plan
         from repro.models.sharding import node_axes as mesh_node_axes
         naxes = mesh_node_axes(self.mesh)
-        N = tcfg.n_nodes
+        axis = naxes if len(naxes) > 1 else naxes[0]
+        T = plan.T
         eta, alpha, gamma = tcfg.eta, tcfg.alpha, tcfg.gamma
-        w_self, w_nb = 1.0 / 3.0, 1.0 / 3.0
-        bits, block = tcfg.bits, tcfg.block
+        bits = tcfg.bits
         use_q = not isinstance(self.compressor, Identity)
+        # (1 + n_hops, T, n): row 0 the exact-stochastic self weight, then
+        # one row per hop — receiver-indexed, per schedule round.
+        wmat_np = np.concatenate(
+            [plan.self_weights(np.float32)[None]]
+            + [h.weights[None] for h in plan.hops], 0).astype(np.float32)
+        hop_pairs = [list(h.pairs) for h in plan.hops]
+        if compat.HAS_SHARD_MAP:
+            model_sharded_leaf = ()
+        else:
+            # full-manual mode: which leaves does the model axis shard?
+            # (tree_flatten order matches local_step's leaves)
+            from repro.models.sharding import spec_mentions
+            sp_leaves = jax.tree_util.tree_leaves(
+                param_specs(TR.abstract_params(self.mcfg)),
+                is_leaf=lambda s: isinstance(s, P))
+            model_sharded_leaf = tuple(
+                spec_mentions(sp, "model") for sp in sp_leaves)
 
-        perm_fwd = [(i, (i + 1) % N) for i in range(N)]
-        perm_bwd = [(i, (i - 1) % N) for i in range(N)]
+        def pp(x, pairs):
+            return jax.lax.ppermute(x, axis, pairs)
 
-        def pp(x, perm):
-            return jax.lax.ppermute(x, naxes if len(naxes) > 1 else naxes[0],
-                                    perm)
-
-        def local_step(X, D, H, Hw, Gl, k_arr):
-            # leaves have a leading local node dim of size 1
-            idx = jax.lax.axis_index(naxes if len(naxes) > 1 else naxes[0])
+        def local_step(X, D, H, Hw, Gl, k_arr, step_k, node_id,
+                       model_id=None):
+            # leaves have a leading local node dim of size 1; Hw leaves an
+            # extra T dim ((1, T, ...)) when the plan is time-varying.
+            # node_id is a P(naxes)-sharded iota: its local shard holds this
+            # node's index (axis_index lowers to a PartitionId instruction
+            # that jax 0.4.x's SPMD partitioner rejects under partial-manual
+            # shard_map, so the index arrives as data instead).
+            idx = node_id[0]
+            t = jnp.asarray(step_k, jnp.int32) % T
+            wmat = jnp.asarray(wmat_np)[:, :, idx]       # (1 + hops, T)
             leaves_X, treedef = jax.tree_util.tree_flatten(X)
             leaves = {
                 "X": leaves_X,
@@ -249,24 +397,18 @@ class DecentralizedTrainer:
                     leaves["X"], leaves["D"], leaves["H"], leaves["Hw"],
                     leaves["G"])):
                 kj = jax.random.fold_in(key_local, j)
+                if model_id is not None and model_sharded_leaf[j]:
+                    # full-manual mode: decorrelate the stochastic-rounding
+                    # draws of the model shards — ONLY for leaves the model
+                    # axis actually shards.  Model-replicated leaves (norms,
+                    # biases) must draw identically on every shard or their
+                    # "replicated" outputs silently diverge per device
+                    # (check_rep is off).
+                    kj = jax.random.fold_in(kj, model_id[0])
                 z = x - eta * g - eta * d
                 diff = z - h
                 if use_q:
-                    blk = block
-                    if tcfg.shard_aligned_blocks:
-                        # align quantization blocks to the model-shard
-                        # boundary: the (.., nb, blk) reshape then never
-                        # crosses shards, so no gather is induced.  Still a
-                        # valid Assumption-2 blockwise quantizer (smaller
-                        # blocks -> slightly more scales, smaller C).
-                        ld = diff.shape[-1]
-                        shard = ld // tcfg.tp_ways if ld % tcfg.tp_ways == 0 \
-                            else ld
-                        # largest EVEN divisor (nibble packing pairs the
-                        # last axis); odd shards fall back to pairing-safe 2
-                        evens = [d for d in range(2, min(block, shard) + 1, 2)
-                                 if shard % d == 0]
-                        blk = max(evens) if evens else 2
+                    blk = self._quant_block(diff.shape)
                     codes, scales = kops.qinf_quantize_lastdim(
                         diff, kj, bits=bits, block=blk)
                     if tcfg.scales_bf16:
@@ -279,42 +421,79 @@ class DecentralizedTrainer:
                         packed = kops.pack_codes(codes, bits=bits)
                         unpack = lambda pk: kops.unpack_codes(
                             pk, bits=bits, n=codes.size).reshape(codes.shape)
-                    # the ONLY communication: packed codes + scales
-                    p_r, s_r = pp(packed, perm_fwd), pp(scales, perm_fwd)
-                    p_l, s_l = pp(packed, perm_bwd), pp(scales, perm_bwd)
-                    dq = lambda pk, sc, b=blk: kops.qinf_dequantize_lastdim(
-                        unpack(pk), sc.astype(jnp.float32), diff.shape,
-                        diff.dtype, block=b)
+                    # byte-cast scales: EVERY wire payload is u8
+                    s_wire = jax.lax.bitcast_convert_type(scales, jnp.uint8)
+                    dq = lambda pk, su8, b=blk: kops.qinf_dequantize_lastdim(
+                        unpack(pk),
+                        jax.lax.bitcast_convert_type(
+                            su8, scales.dtype).astype(jnp.float32),
+                        diff.shape, diff.dtype, block=b)
+                    # the ONLY communication: packed codes + scales, one
+                    # ppermute pair per hop of the plan
+                    recvs = [dq(pp(packed, pr), pp(s_wire, pr))
+                             for pr in hop_pairs]
                     q_self = kops.qinf_dequantize_lastdim(
                         codes, scales.astype(jnp.float32), diff.shape,
                         diff.dtype, block=blk)
-                    wq = (w_self * q_self + w_nb * (dq(p_l, s_l) + dq(p_r, s_r)))
                 else:
                     q_self = diff
-                    wq = w_self * diff + w_nb * (pp(diff, perm_bwd)
-                                                 + pp(diff, perm_fwd))
+                    recvs = [pp(diff, pr) for pr in hop_pairs]
+                # W_t' Q for every round t' of the cycle, from the same
+                # received payloads: (T, 1, ...)
+                qstack = jnp.stack([q_self] + recvs)     # (1 + hops, 1, ...)
+                wq_all = jnp.tensordot(
+                    wmat.T, qstack.astype(jnp.float32), axes=(1, 0)
+                ).astype(diff.dtype)
                 zhat = h + q_self
-                zhat_w = hw + wq
+                if T == 1:
+                    zhat_w = hw + wq_all[0]
+                    hw_new = (1 - alpha) * hw + alpha * zhat_w
+                else:
+                    hw_t = jnp.take(hw, t, axis=1)       # slot k % T
+                    zhat_w = hw_t + jnp.take(wq_all, t, axis=0)
+                    # Hw[t'] tracks W_t' H: H += alpha Q  =>  += alpha W_t' Q
+                    hw_new = hw + alpha * jnp.moveaxis(wq_all, 0, 1)
                 dnew = d + gamma / (2 * eta) * (zhat - zhat_w)
                 v = z - gamma / 2.0 * (zhat - zhat_w)
                 xnew = self.prox(v, eta)
                 nX.append(xnew)
                 nD.append(dnew)
                 nH.append((1 - alpha) * h + alpha * zhat)
-                nHw.append((1 - alpha) * hw + alpha * zhat_w)
+                nHw.append(hw_new)
             unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
             return unf(nX), unf(nD), unf(nH), unf(nHw)
 
-        # shard_map specs mention ONLY the manual (node) axes; the model-axis
-        # sharding of trailing dims stays under GSPMD (auto axes).
-        specs = tmap(lambda l: P(naxes, *((None,) * (l.ndim - 1))), plead.X)
+        # Modern JAX: partial-manual shard_map — specs mention ONLY the
+        # manual (node) axes, the model-axis sharding of trailing dims stays
+        # under GSPMD (auto axes).  JAX 0.4.x: its SPMD partitioner rejects
+        # ppermute under partial-manual (hard CHECK), so the whole gossip
+        # step goes FULL-manual there: every mesh axis is manual, specs
+        # carry the per-leaf model placement (param_specs), and each model
+        # shard quantizes/ppermutes its local slice independently.
         key_data = jax.random.key_data(key)
-        shmapped = jax.shard_map(
+        node_ids = jnp.arange(tcfg.n_nodes, dtype=jnp.int32)
+        if compat.HAS_SHARD_MAP:
+            specs = tmap(lambda l: P(naxes, *((None,) * (l.ndim - 1))),
+                         plead.X)
+            manual = set(naxes)
+            extra_in, extra_args = (), ()
+        else:
+            from repro.models.sharding import model_axis_size
+            specs = param_specs(TR.abstract_params(self.mcfg),
+                                prepend=(naxes,))
+            manual = set(self.mesh.axis_names)
+            extra_in = (P("model"),)
+            extra_args = (jnp.arange(model_axis_size(self.mesh),
+                                     dtype=jnp.int32),)
+        hw_specs = specs if T == 1 else self._hw_specs(specs)
+        shmapped = compat.shard_map(
             local_step, mesh=self.mesh,
-            in_specs=(specs, specs, specs, specs, specs, P()),
-            out_specs=(specs, specs, specs, specs),
-            axis_names=set(naxes), check_vma=False)
+            in_specs=(specs, specs, specs, hw_specs, specs, P(), P(),
+                      P(naxes)) + extra_in,
+            out_specs=(specs, specs, specs, hw_specs),
+            axis_names=manual, check=False)
         nX, nD, nH, nHw = shmapped(plead.X, plead.D, plead.comm.H,
-                                   plead.comm.Hw, G, key_data)
+                                   plead.comm.Hw, G, key_data, plead.k,
+                                   node_ids, *extra_args)
         return ProxLEADState(nX, nD, CommState(nH, nHw), plead.oracle,
                              plead.k + 1)

@@ -72,6 +72,29 @@ class TestQInf:
         assert bits == 1024 * 2 + 4 * 32
         assert bits < 1024 * 32  # beats f32 by >10x
 
+    @pytest.mark.parametrize("shape,block", [
+        ((1024,), 256),      # divisible, 1D
+        ((300,), 256),       # ragged 1D: pads to 1 block of 256
+        ((3, 300), 256),     # ragged last dim, multi-row: 3 blocks, not 4
+        ((7, 13, 5), 8),     # small ragged blocks per row
+        ((8, 256), 256),
+    ])
+    def test_payload_bits_matches_actual_payload(self, shape, block):
+        """Regression: blocks count PER LAST-DIM ROW (what
+        qinf_quantize_lastdim produces), not per flattened tensor —
+        payload_bits must equal b * codes.size + 32 * scales.size of the
+        payload actually communicated."""
+        from repro.kernels import ops as kops
+        q = C.QInf(bits=2, block=block)
+        x = jax.random.normal(jax.random.key(0), shape)
+        codes, scales = kops.qinf_quantize_lastdim(
+            x, jax.random.key(1), bits=q.bits, block=block)
+        assert q.payload_bits(shape) == codes.size * q.bits + scales.size * 32
+        # and the compress() payload dict agrees
+        payload = q.compress(x, jax.random.key(1))
+        assert q.payload_bits(shape) == (payload["codes"].size * q.bits
+                                         + payload["scales"].size * 32)
+
 
 @settings(max_examples=40, deadline=None)
 @given(st.integers(1, 400), st.integers(1, 6),

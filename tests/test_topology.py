@@ -68,3 +68,122 @@ def test_make_topology_dispatch():
     assert T.make_topology("torus2d", 16).n == 16
     with pytest.raises(ValueError):
         T.make_topology("nope", 4)
+
+
+# ---------------------------------------------------------------------------
+# Exchange-plan compilation (sharded neighbor gossip)
+# ---------------------------------------------------------------------------
+
+def test_plan_ring_is_two_shift_hops():
+    plan = T.compile_plan(T.ring(8).W, name="ring")
+    assert len(plan.hops) == 2
+    assert sorted(h.shift for h in plan.hops) == [1, 7]
+    assert plan.T == 1 and plan.pairs_per_round == 16
+    np.testing.assert_allclose(plan.as_matrices()[0], T.ring(8).W,
+                               atol=1e-12)
+
+
+def test_plan_exponential_power_of_two_hops():
+    topo = T.exponential(16)
+    plan = T.compile_plan(topo.W, name="exp")
+    # offsets +-2^j mod n: {1,2,4,8,12,14,15} -> one hop each
+    assert sorted(h.shift for h in plan.hops) == [1, 2, 4, 8, 12, 14, 15]
+    np.testing.assert_allclose(plan.as_matrices()[0], topo.W, atol=1e-12)
+
+
+@pytest.mark.parametrize("maker,kw", [
+    (T.torus2d, {"rows": 2, "cols": 4}), (T.star, {"n": 5}),
+    (T.expander, {"n": 12}), (T.torus2d, {"rows": 4, "cols": 4}),
+])
+def test_plan_general_graphs_reconstruct_W(maker, kw):
+    """Edge-colored plans (non-circulant supports, non-uniform Metropolis
+    weights) must reconstruct W exactly, with valid ppermute hops."""
+    topo = maker(**kw)
+    plan = T.compile_plan(topo.W, name=topo.name)
+    np.testing.assert_allclose(plan.as_matrices()[0], topo.W, atol=1e-12)
+    deg = max(len(nb) for nb in topo.neighbors)
+    assert len(plan.hops) <= 2 * deg - 1     # greedy coloring bound
+    for hop in plan.hops:                    # XLA ppermute contract
+        srcs = [s for s, _ in hop.pairs]
+        dsts = [d for _, d in hop.pairs]
+        assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+
+
+def test_plan_schedule_stack_per_round_weights():
+    """A (T, n, n) schedule compiles to union-support hops whose per-round
+    weight tables reconstruct every W_t; inactive rounds gate to zero."""
+    from repro.netsim.schedule import make_schedule
+    sched = make_schedule("alternating", 8)      # ring <-> exponential
+    plan = T.compile_plan(sched.W_stack, name=sched.name)
+    assert plan.T == 2
+    np.testing.assert_allclose(plan.as_matrices(), sched.W_stack, atol=1e-12)
+    active = plan.active_pairs()
+    assert active[0] == 16 and active[1] == 40   # ring round vs exp round
+    assert plan.pairs_per_round == 40            # union support moves always
+
+
+def test_plan_random_matching_rounds():
+    from repro.netsim.schedule import make_schedule
+    sched = make_schedule("random_matching", 8, rounds=6)
+    plan = T.compile_plan(sched.W_stack, name=sched.name)
+    assert plan.T == 6
+    np.testing.assert_allclose(plan.as_matrices(), sched.W_stack, atol=1e-12)
+    assert (plan.active_pairs() == 8).all()      # 4 pairs, both directions
+
+
+def test_plan_self_weights_exact_stochastic():
+    plan = T.compile_plan(T.star(5).W, name="star")
+    sw = plan.self_weights(np.float32)
+    assert sw.dtype == np.float32
+    # sw is 1 - sum(hop weights) computed IN f32 (the _exact_stochastic
+    # drift correction), so the f32 row total reproduces 1 to one ulp
+    total = np.zeros_like(sw)
+    for h in plan.hops:
+        total += np.asarray(h.weights, np.float32)
+    expect = (np.float32(1.0) - total).astype(np.float32)
+    assert (sw == expect).all()
+    np.testing.assert_allclose(sw + total, 1.0, atol=2e-7)
+
+
+def test_plan_rejects_asymmetric_support():
+    W = np.array([[0.5, 0.5, 0.0],
+                  [0.0, 0.5, 0.5],
+                  [0.5, 0.0, 0.5]])
+    with pytest.raises(ValueError):
+        T.compile_plan(W)
+
+
+def test_neighbor_mixer_stacked_matches_dense():
+    """Device-free reference: NeighborMixer.mix_stacked == DenseMixer /
+    ScheduledMixer for static and per-round W_k."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.comm import DenseMixer, NeighborMixer
+    from repro.netsim.schedule import ScheduledMixer, make_schedule
+
+    X = jax.random.normal(jax.random.key(0), (8, 17), jnp.float32)
+    for topo in (T.ring(8), T.exponential(8), T.torus2d(2, 4), T.star(8)):
+        plan = T.compile_plan(topo.W, name=topo.name)
+        nm = NeighborMixer(plan=plan)
+        np.testing.assert_allclose(
+            np.asarray(nm((X,))[0]),
+            np.asarray(DenseMixer(topo.W)((X,))[0]), atol=2e-6)
+
+    sched = make_schedule("alternating", 8)
+    plan = T.compile_plan(sched.W_stack, name=sched.name)
+    nm = NeighborMixer(plan=plan)
+    sm = ScheduledMixer(sched)
+    for k in range(4):
+        np.testing.assert_allclose(
+            np.asarray(nm((X,), k)[0]),
+            np.asarray(sm((X,), k)[0]), atol=2e-6)
+    # misuse guards: a time-varying plan must be given the round index,
+    # and tells comm() to recompute Zhat_w (static Hw recursion invalid)
+    assert nm.recompute_hw and not NeighborMixer(
+        plan=T.compile_plan(T.ring(8).W)).recompute_hw
+    with pytest.raises(ValueError, match="time-varying"):
+        nm((X,))
+    h, q = X, 0.5 * X
+    np.testing.assert_allclose(
+        np.asarray(nm.comm_mix(h, q, 1)),
+        np.asarray(sm((h + q,), 1)[0]), atol=2e-6)

@@ -100,6 +100,41 @@ def test_moe_arch_trains(setup):
     assert np.isfinite(losses).all() and losses[-1] < losses[0] + 0.5
 
 
+def test_compressor_routing_randk(setup):
+    """Regression: compressor names must route through make_compressor —
+    'randk' used to be silently coerced to QInf."""
+    from repro.core.compression import RandK
+    cfg, data = setup
+    tcfg = TrainerConfig(n_nodes=N, eta=0.2, compressor="randk", frac=0.2)
+    tr = DecentralizedTrainer(cfg, tcfg)
+    assert isinstance(tr.compressor, RandK)
+    assert tr.compressor.frac == 0.2
+    state, losses, _ = _train(cfg, data, tcfg, steps=8)
+    assert np.isfinite(losses).all()
+    # the sharded backend packs QInf payloads only — fail fast at __init__
+    with pytest.raises(ValueError, match="neighbor backend"):
+        DecentralizedTrainer(cfg, TrainerConfig(
+            n_nodes=N, compressor="randk", backend="neighbor"))
+
+
+def test_compressor_topk_requires_opt_in(setup):
+    """TopK is biased (violates Assumption 2): refuse unless
+    allow_biased=True."""
+    from repro.core.compression import TopK
+    cfg, _ = setup
+    with pytest.raises(ValueError, match="biased"):
+        DecentralizedTrainer(cfg, TrainerConfig(n_nodes=N, compressor="topk"))
+    tr = DecentralizedTrainer(cfg, TrainerConfig(
+        n_nodes=N, compressor="topk", allow_biased=True))
+    assert isinstance(tr.compressor, TopK)
+
+
+def test_compressor_unknown_name_raises(setup):
+    cfg, _ = setup
+    with pytest.raises(ValueError, match="unknown compressor"):
+        DecentralizedTrainer(cfg, TrainerConfig(n_nodes=N, compressor="nope"))
+
+
 def test_adam_preconditioned_prox_lead(setup):
     """Beyond-paper: Adam-preconditioned Prox-LEAD trains faster per step
     than plain at matched (small) eta, moments stay local."""
