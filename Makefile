@@ -8,7 +8,9 @@ test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # full PR gate: tier-1 + benchmark smoke (emits BENCH_netsim.json /
-# BENCH_comm.json at the repo root so the bench trajectory accumulates)
+# BENCH_comm.json / BENCH_wire.json at the repo root so the bench
+# trajectory accumulates; the wire suite runs bench_wire's bucketed vs
+# per-leaf gossip measurement in an 8-device subprocess)
 ci: test
 	PYTHONPATH=src:. $(PY) -m benchmarks.run --smoke
 

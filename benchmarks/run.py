@@ -28,24 +28,25 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="reduced iteration counts (CI)")
     ap.add_argument("--smoke", action="store_true",
-                    help="make-ci gate: tiny comm+netsim sweep, writes "
-                         "BENCH_comm.json / BENCH_netsim.json at repo root "
-                         "so the bench trajectory accumulates per PR")
+                    help="make-ci gate: tiny comm+netsim+wire sweep, writes "
+                         "BENCH_comm.json / BENCH_netsim.json / "
+                         "BENCH_wire.json at repo root so the bench "
+                         "trajectory accumulates per PR")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,table3,kernels,"
-                         "comm,ablations,netsim")
+                         "comm,ablations,netsim,wire")
     ap.add_argument("--json-out", default="experiments/bench_results.json")
     args = ap.parse_args(argv)
     if args.smoke and args.only is None:
-        args.only = "comm,netsim"
+        args.only = "comm,netsim,wire"
     if args.steps is not None:
         steps = args.steps
     else:
         steps = 60 if args.smoke else 200 if args.quick else 800
 
     from benchmarks import (ablations, bench_comm, bench_kernels,
-                            bench_netsim, fig1_smooth, fig2_nonsmooth,
-                            table3_complexity)
+                            bench_netsim, bench_wire, fig1_smooth,
+                            fig2_nonsmooth, table3_complexity)
 
     suites = {
         "fig1": ("Fig.1 smooth logistic regression",
@@ -69,6 +70,9 @@ def main(argv=None):
         "netsim": ("Netsim robustness: drop rate x compression bits",
                    lambda: bench_netsim.run(min(400, steps), verbose=True),
                    bench_netsim.validate),
+        "wire": ("Wire path: bucketed vs per-leaf gossip (8-dev subprocess)",
+                 lambda: bench_wire.run(steps=min(20, steps), verbose=True),
+                 bench_wire.validate),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
 
@@ -107,7 +111,7 @@ def main(argv=None):
     print("results written to", out)
     if args.smoke:
         # per-suite trajectory files at the repo root (one per PR gate)
-        for key in ("netsim", "comm"):
+        for key in ("netsim", "comm", "wire"):
             if key not in all_rows:
                 continue
             p = pathlib.Path(f"BENCH_{key}.json")

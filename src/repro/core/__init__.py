@@ -2,6 +2,6 @@
 # surrounding machinery — compression operators, the COMM procedure, mixing
 # topologies, stochastic gradient oracles (SGD/LSVRG/SAGA), prox operators,
 # the baselines it is compared against, and the convergence theory.
-from repro.core import (baselines, comm, compression, oracles, prox,  # noqa: F401
-                        prox_lead, theory, topology)
+from repro.core import (baselines, bucket, comm, compression,  # noqa: F401
+                        oracles, prox, prox_lead, theory, topology)
 from repro.core.prox_lead import ProxLEAD, lead, nids  # noqa: F401

@@ -115,16 +115,22 @@ class QInf(Compressor):
         # Last-dim blockwise form: rank-generic and sharding-preserving —
         # never flattens a (node, layer, ...)-stacked tensor.  The Pallas
         # kernel in repro.kernels.quantize is the TPU hot-path twin of this
-        # math (parity-tested); ``use_pallas`` routes 2D tiles through it.
-        if self.use_pallas and x.ndim == 2 and x.shape[-1] == self.block \
-                and x.shape[0] % 8 == 0:
-            u = jax.random.uniform(key, x.shape, jnp.float32)
+        # math (parity-tested); ``use_pallas`` routes 2D tiles through it,
+        # padding ragged row counts up to the sublane tile (the noise is
+        # drawn on the true rows first, so results are identical either
+        # way).
+        if self.use_pallas and x.ndim == 2 and x.shape[-1] == self.block:
             from repro.kernels import quantize as qk
+            R = x.shape[0]
+            Rp = -(-R // qk.ROWS_TILE) * qk.ROWS_TILE
+            u = jax.random.uniform(key, x.shape, jnp.float32)
+            pad = [(0, Rp - R), (0, 0)]
             codes, scales = qk.qinf_quantize_blocks(
-                x.astype(jnp.float32), u, bits=self.bits, block=self.block,
+                jnp.pad(x.astype(jnp.float32), pad), jnp.pad(u, pad),
+                bits=self.bits, block=self.block,
                 interpret=jax.default_backend() != "tpu")
-            codes = codes[:, None, :]       # (R, nb=1, block)
-            scales = scales[:, None, :]
+            codes = codes[:R, None, :]       # (R, nb=1, block)
+            scales = scales[:R, None, :]
         else:
             codes, scales = kops.qinf_quantize_lastdim(
                 x, key, bits=self.bits, block=self.block)
@@ -175,7 +181,10 @@ class RandK(Compressor):
     def payload_bits(self, shape, dtype=jnp.float32):
         n = int(np.prod(shape))
         k = max(1, int(round(self.frac * n)))
-        return k * (32 + 32)  # value + index
+        # a coordinate index needs ceil(log2(n)) bits, not a hardcoded f32
+        # word — at n = 7840 that is 13 bits/index, not 32
+        idx_bits = max(1, int(np.ceil(np.log2(n)))) if n > 1 else 1
+        return k * (32 + idx_bits)  # value + index
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,7 +233,10 @@ def make_compressor(name: str, **kwargs) -> Compressor:
 
 
 def empirical_C(comp: Compressor, x: jax.Array, key: jax.Array, trials: int = 64):
-    """Monte-Carlo estimate of E||Q(x)-x||^2 / ||x||^2 for a given x."""
+    """Monte-Carlo estimate of E||Q(x)-x||^2 / ||x||^2 for a given x.
+
+    One vmapped compress over the key batch — not ``trials`` separate
+    dispatches (the Pallas quantize path batches through its vmap rule)."""
     keys = jax.random.split(key, trials)
-    errs = jnp.stack([jnp.sum((comp(x, k) - x) ** 2) for k in keys])
+    errs = jax.vmap(lambda k: jnp.sum((comp(x, k) - x) ** 2))(keys)
     return float(jnp.mean(errs) / jnp.sum(x ** 2))

@@ -1,6 +1,8 @@
 # Pallas TPU kernels for the compression hot-spot the paper optimizes:
-# blockwise inf-norm b-bit quantization (paper eq. 21).
+# blockwise inf-norm b-bit quantization (paper eq. 21) and the fused
+# bucketed wire path (quantize+pack, unpack+dequant+mix).
 #   quantize.py — pl.pallas_call kernels with explicit BlockSpec VMEM tiling
 #   ops.py      — jit'd public wrappers (padding, packing, dispatch)
 #   ref.py      — pure-jnp oracles the kernels are validated against
+#                 (and the off-TPU hot path for the fused wire ops)
 from repro.kernels import ops, quantize, ref  # noqa: F401

@@ -20,10 +20,17 @@ import numpy as np
 
 from repro.kernels import quantize as qk
 from repro.kernels import ref as kref
+from repro.kernels.ref import wire_bits_per_element  # noqa: F401  (re-export)
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _use_pallas_default() -> bool:
+    # interpret-mode Pallas is a parity/debug tool, not a fast path: off
+    # TPU the fused wire ops run their pure-jnp oracles (kernels.ref)
+    return jax.default_backend() == "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -33,11 +40,12 @@ def _interpret_default() -> bool:
 # tensor (leading dims — node, layer — pass through untouched).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("bits", "block"))
-def qinf_quantize_lastdim(x: jax.Array, key: jax.Array, *, bits: int = 2,
-                          block: int = 256):
-    """Blockwise quantize along the last axis.  Returns (codes int8
-    (..., nb, block), scales f32 (..., nb, 1))."""
+def blockwise_lastdim(x: jax.Array, *, block: int) -> jax.Array:
+    """(..., D) -> (..., nb, block) f32, zero-padded along the last axis.
+
+    The exact reshape ``qinf_quantize_lastdim`` quantizes — factored out so
+    the bucketed wire path blocks its leaves (and draws stochastic-rounding
+    noise of the same shape) bit-for-bit like the per-leaf path."""
     if x.ndim == 0:
         x = x[None]
     D = x.shape[-1]
@@ -46,7 +54,15 @@ def qinf_quantize_lastdim(x: jax.Array, key: jax.Array, *, bits: int = 2,
     xf = x.astype(jnp.float32)
     if pad:
         xf = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    xb = xf.reshape(*x.shape[:-1], nb, block)
+    return xf.reshape(*x.shape[:-1], nb, block)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def qinf_quantize_lastdim(x: jax.Array, key: jax.Array, *, bits: int = 2,
+                          block: int = 256):
+    """Blockwise quantize along the last axis.  Returns (codes int8
+    (..., nb, block), scales f32 (..., nb, 1))."""
+    xb = blockwise_lastdim(x, block=block)
     u = jax.random.uniform(key, xb.shape, jnp.float32)
     levels = jnp.float32(2 ** (bits - 1))
     maxabs = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
@@ -142,14 +158,6 @@ def unpack_codes_lastdim(packed: jax.Array, *, bits: int) -> jax.Array:
         inter = packed.astype(jnp.int16)
     return (inter - offset).astype(jnp.int8)
 
-def wire_bits_per_element(bits: int) -> int:
-    """(b+1)-bit offset codes, rounded up to nibble/byte packing."""
-    raw = bits + 1
-    if raw <= 4:
-        return 4
-    return 8
-
-
 @functools.partial(jax.jit, static_argnames=("bits",))
 def pack_codes(codes: jax.Array, *, bits: int) -> jax.Array:
     """Pack int8 codes in [-2^{b-1}, 2^{b-1}] into uint8 wire format."""
@@ -163,6 +171,68 @@ def pack_codes(codes: jax.Array, *, bits: int) -> jax.Array:
         pairs = flat.reshape(-1, 2)
         return (pairs[:, 0] | (pairs[:, 1] << 4)).astype(jnp.uint8)
     return flat
+
+
+# ---------------------------------------------------------------------------
+# Fused wire-path ops (bucketed gossip backend): quantize+pack and
+# unpack+dequant+mix as single passes.  On TPU these are the Pallas kernels
+# in repro.kernels.quantize; elsewhere the pure-jnp oracles (kernels.ref)
+# run directly — interpret-mode Pallas is parity-test-only.
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(a: jax.Array, rows: int) -> jax.Array:
+    pad = rows - a.shape[0]
+    if pad == 0:
+        return a
+    return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "use_pallas"))
+def qinf_quantize_pack(xrows: jax.Array, urows: jax.Array, *, bits: int,
+                       block: int, use_pallas=None):
+    """Fused quantize + wire-pack of (R, block) rows for any R.
+
+    Returns (packed u8 (R, W), scales f32 (R, 1)) with
+    W = packed_width(block, bits).  The Pallas path pads R up to ROWS_TILE
+    and slices back — padded rows exist only inside the kernel launch,
+    never on the wire."""
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if not use_pallas:
+        return kref.qinf_quantize_pack_blocks_ref(xrows, urows, bits)
+    R = xrows.shape[0]
+    Rp = -(-R // qk.ROWS_TILE) * qk.ROWS_TILE
+    packed, scales = qk.qinf_quantize_pack_blocks(
+        _pad_rows(xrows.astype(jnp.float32), Rp), _pad_rows(urows, Rp),
+        bits=bits, block=block, interpret=_interpret_default())
+    return packed[:R], scales[:R]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "out_dtype",
+                                             "use_pallas"))
+def qinf_unpack_dequant_mix(packed: jax.Array, scales: jax.Array,
+                            w: jax.Array, *, bits: int, block: int,
+                            out_dtype=jnp.float32, use_pallas=None):
+    """Fused unpack + dequantize + weighted mix across the (1 + hops)
+    received payloads of one bucket group.
+
+    ``packed`` (S, R, W) u8, ``scales`` (S, R, 1) f32, ``w`` (T, S) — sender
+    0 is self.  Returns (mix (T, R, block) out_dtype, qself (R, block)
+    out_dtype); per-sender dequantized tensors are never materialized in
+    HBM on the Pallas path."""
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if not use_pallas:
+        return kref.qinf_unpack_dequant_mix_blocks_ref(
+            packed, scales, w, bits, out_dtype)
+    R = packed.shape[1]
+    Rp = -(-R // qk.ROWS_TILE) * qk.ROWS_TILE
+    pad2 = lambda a: jnp.moveaxis(_pad_rows(jnp.moveaxis(a, 1, 0), Rp), 0, 1)
+    mix, qself = qk.qinf_unpack_dequant_mix_blocks(
+        pad2(packed), pad2(scales), w, bits=bits, block=block,
+        out_dtype=out_dtype, interpret=_interpret_default())
+    return mix[:, :R], qself[:R]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "n"))

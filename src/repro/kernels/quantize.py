@@ -20,9 +20,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import wire_bits_per_element
+
 # One quantization block per row; 256 matches the paper's block size and is a
 # multiple of the 128-lane VPU width.
 ROWS_TILE = 8  # sublane tile: f32 min tile is (8, 128)
+
+
+def packed_width(block: int, bits: int) -> int:
+    """Wire bytes per quantization block: nibble-packed for bits <= 3."""
+    return block // 2 if wire_bits_per_element(bits) == 4 else block
 
 
 def _quantize_kernel(x_ref, u_ref, codes_ref, scales_ref, *, bits: int):
@@ -71,6 +78,126 @@ def qinf_quantize_blocks(xb: jax.Array, ub: jax.Array, *, bits: int,
         ],
         interpret=interpret,
     )(xb, ub)
+
+
+# ---------------------------------------------------------------------------
+# Fused wire-path kernels (bucketed gossip backend).
+#
+# ``_quantize_pack_kernel`` emits the uint8 wire payload directly — the int8
+# code tile lives only in VMEM, never round-tripping through HBM between a
+# quantize pass and a separate pack pass.  Packing uses HALVES order (byte k
+# = code k | code k+B/2 << 4): both halves are contiguous lane slices, so no
+# strided access or lane reshape is needed (see kernels.ref).
+#
+# ``_unpack_dequant_mix_kernel`` consumes the (1 + hops) received payloads
+# of one bucket group and produces the weight-mixed sum_s w[t,s] Q_s for
+# every schedule round t plus the dequantized self payload — per-sender
+# dequantized tensors exist only as VMEM tiles.
+# ---------------------------------------------------------------------------
+
+
+def _quantize_pack_kernel(x_ref, u_ref, packed_ref, scales_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)           # (ROWS_TILE, BLOCK)
+    u = u_ref[...].astype(jnp.float32)
+    levels = jnp.float32(2 ** (bits - 1))
+    maxabs = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    safe = jnp.where(maxabs > 0, maxabs, jnp.float32(1.0))
+    mag = jnp.minimum(jnp.floor(levels * jnp.abs(x) / safe + u), levels)
+    enc = (jnp.sign(x) * mag).astype(jnp.int32) + 2 ** (bits - 1)
+    if wire_bits_per_element(bits) == 4:
+        half = enc.shape[-1] // 2
+        enc = enc[:, :half] | (enc[:, half:] << 4)
+    packed_ref[...] = enc.astype(jnp.uint8)
+    scales_ref[...] = (maxabs / levels).astype(jnp.float32)
+
+
+def _unpack_dequant_mix_kernel(p_ref, s_ref, w_ref, mix_ref, qself_ref, *,
+                               bits: int, out_dtype):
+    p = p_ref[...].astype(jnp.int32)             # (S, ROWS_TILE, W)
+    offset = jnp.int32(2 ** (bits - 1))
+    if wire_bits_per_element(bits) == 4:
+        lo = (p & 0x0F) - offset
+        hi = ((p >> 4) & 0x0F) - offset
+        codes = jnp.concatenate([lo, hi], axis=-1).astype(jnp.float32)
+    else:
+        codes = (p - offset).astype(jnp.float32)
+    q = codes * s_ref[...].astype(jnp.float32)   # (S, ROWS_TILE, BLOCK)
+    # round each sender's dequantized payload through the leaf dtype before
+    # the f32 accumulation — bit-for-bit what the per-leaf path computes
+    # when it stacks dequantized leaves
+    q = q.astype(out_dtype).astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)           # (T, S)
+    # dot over the S senders, not an unrolled madd chain — matches the
+    # per-leaf path's accumulation exactly (see kernels.ref.weighted_mix_ref)
+    mix_ref[...] = jnp.tensordot(w, q, axes=(1, 0)).astype(out_dtype)
+    qself_ref[...] = q[0].astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def qinf_quantize_pack_blocks(xb: jax.Array, ub: jax.Array, *, bits: int,
+                              block: int = 256, interpret: bool = True):
+    """Fused quantize+pack: (R, block) rows -> (packed u8 (R, W), scales f32
+    (R, 1)), W = packed_width(block, bits).  R % ROWS_TILE == 0 (callers pad
+    for the kernel and slice the output; padded rows never reach the wire).
+    """
+    R, B = xb.shape
+    assert B == block, (xb.shape, block)
+    assert R % ROWS_TILE == 0, f"R={R} must be a multiple of {ROWS_TILE}"
+    W = packed_width(block, bits)
+    grid = (R // ROWS_TILE,)
+    return pl.pallas_call(
+        functools.partial(_quantize_pack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_TILE, block), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_TILE, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS_TILE, W), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, W), jnp.uint8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, ub)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "out_dtype",
+                                             "interpret"))
+def qinf_unpack_dequant_mix_blocks(packed: jax.Array, scales: jax.Array,
+                                   w: jax.Array, *, bits: int,
+                                   block: int = 256, out_dtype=jnp.float32,
+                                   interpret: bool = True):
+    """Fused unpack+dequant+mix: packed (S, R, W) u8 + scales (S, R, 1) f32
+    + weights (T, S) -> (mix (T, R, block) out_dtype, qself (R, block)
+    out_dtype) with mix[t] = sum_s w[t, s] Q_s.  Sender 0 is self."""
+    S, R, W = packed.shape
+    T = w.shape[0]
+    assert W == packed_width(block, bits), (packed.shape, block, bits)
+    assert scales.shape == (S, R, 1) and w.shape == (T, S)
+    assert R % ROWS_TILE == 0, f"R={R} must be a multiple of {ROWS_TILE}"
+    grid = (R // ROWS_TILE,)
+    return pl.pallas_call(
+        functools.partial(_unpack_dequant_mix_kernel, bits=bits,
+                          out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S, ROWS_TILE, W), lambda i: (0, i, 0)),
+            pl.BlockSpec((S, ROWS_TILE, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((T, S), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, ROWS_TILE, block), lambda i: (0, i, 0)),
+            pl.BlockSpec((ROWS_TILE, block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, R, block), out_dtype),
+            jax.ShapeDtypeStruct((R, block), out_dtype),
+        ],
+        interpret=interpret,
+    )(packed, scales, w)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))

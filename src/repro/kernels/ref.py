@@ -1,11 +1,21 @@
 """Pure-jnp oracles for the kernels in this package.
 
 These are the ground truth the Pallas kernels are validated against
-(tests sweep shapes/dtypes/bits and assert_allclose).
+(tests sweep shapes/dtypes/bits and assert_allclose).  On CPU (no TPU
+backend) the fused wire-path ops in :mod:`repro.kernels.ops` dispatch to
+these oracles directly — interpret-mode Pallas is for parity tests only.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def wire_bits_per_element(bits: int) -> int:
+    """(b+1)-bit offset codes, rounded up to nibble/byte packing."""
+    raw = bits + 1
+    if raw <= 4:
+        return 4
+    return 8
 
 
 def qinf_quantize_blocks_ref(xb: jnp.ndarray, ub: jnp.ndarray, bits: int):
@@ -34,3 +44,83 @@ def qinf_dequantize_blocks_ref(codes: jnp.ndarray, scales: jnp.ndarray,
                                out_dtype=jnp.float32):
     """Inverse of :func:`qinf_quantize_blocks_ref`: codes (R,B) * scales (R,1)."""
     return (codes.astype(jnp.float32) * scales.astype(jnp.float32)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused wire-path oracles (bucketed gossip backend).
+#
+# Wire format: offset-encode c + 2^{b-1} into (b+1) bits; for b <= 3 two
+# codes share a byte in HALVES order — byte k of a block packs code k (low
+# nibble) with code k + B/2 (high nibble).  Halves packing only ever slices
+# contiguous runs of the lane axis, so the TPU kernel needs neither strided
+# access nor an in-kernel reshape (pairs-adjacent packing, as
+# ``ops.pack_codes_lastdim`` uses, would).  The two layouts differ on the
+# wire but pack/unpack round-trips are exact either way, and only the
+# round-trip enters the update math.
+# ---------------------------------------------------------------------------
+
+
+def pack_codes_halves_ref(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(..., B) int codes -> (..., B/2) uint8 for bits <= 3 (halves order);
+    plain offset bytes otherwise."""
+    enc = codes.astype(jnp.int32) + 2 ** (bits - 1)
+    if wire_bits_per_element(bits) == 4:
+        half = enc.shape[-1] // 2
+        return (enc[..., :half] | (enc[..., half:] << 4)).astype(jnp.uint8)
+    return enc.astype(jnp.uint8)
+
+
+def unpack_codes_halves_ref(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes_halves_ref` -> int8 codes (..., B)."""
+    offset = jnp.int32(2 ** (bits - 1))
+    p = packed.astype(jnp.int32)
+    if wire_bits_per_element(bits) == 4:
+        lo = (p & 0x0F) - offset
+        hi = ((p >> 4) & 0x0F) - offset
+        codes = jnp.concatenate([lo, hi], axis=-1)
+    else:
+        codes = p - offset
+    return codes.astype(jnp.int8)
+
+
+def qinf_quantize_pack_blocks_ref(xb: jnp.ndarray, ub: jnp.ndarray,
+                                  bits: int):
+    """Fused quantize + wire-pack: (R, B) rows -> (packed uint8 (R, W),
+    scales f32 (R, 1)) with W = B/2 for bits <= 3 else B.  No int8 code
+    intermediate ever reaches HBM in the Pallas twin."""
+    codes, scales = qinf_quantize_blocks_ref(xb, ub, bits)
+    return pack_codes_halves_ref(codes, bits), scales
+
+
+def weighted_mix_ref(w: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """out[t] = sum_s w[t, s] * q[s] in f32, as a dot over the sender axis.
+
+    A dot (not an unrolled multiply-add chain) on purpose: XLA's dot
+    emitter accumulates the S-length contraction identically whatever the
+    non-contracted shape, whereas an elementwise madd chain gets FMA-
+    contracted shape-dependently by the CPU backend — the bucketed and
+    per-leaf wire paths mix differently-shaped views of the same payloads
+    and must agree bit for bit.  ``w`` (T, S), ``q`` (S, ...) -> (T, ...).
+    """
+    return jnp.tensordot(w.astype(jnp.float32), q.astype(jnp.float32),
+                         axes=(1, 0))
+
+
+def qinf_unpack_dequant_mix_blocks_ref(packed: jnp.ndarray,
+                                       scales: jnp.ndarray,
+                                       w: jnp.ndarray, bits: int,
+                                       out_dtype=jnp.float32):
+    """Fused unpack + dequantize + weighted mix across senders.
+
+    ``packed``: (S, R, W) uint8 — sender 0 is self, then one per hop.
+    ``scales``: (S, R, 1) f32.  ``w``: (T, S) receiver weights per schedule
+    round.  Returns (mix (T, R, B) out_dtype, qself (R, B) out_dtype) where
+    mix[t] = sum_s w[t, s] * Q_s.  Each Q_s rounds through ``out_dtype``
+    before the f32 accumulation — exactly what the per-leaf path does when
+    it stacks dequantized leaves — so the two wire modes agree bit for bit.
+    """
+    codes = unpack_codes_halves_ref(packed, bits).astype(jnp.float32)
+    q = codes * scales.astype(jnp.float32)            # (S, R, B)
+    q = q.astype(out_dtype).astype(jnp.float32)
+    mix = weighted_mix_ref(w, q)
+    return mix.astype(out_dtype), q[0].astype(out_dtype)

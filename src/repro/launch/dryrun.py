@@ -204,6 +204,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod=False, backend="dense",
                 tr, jax.tree_util.tree_leaves(tr.abstract_state().plead.X))
             rec["gossip"] = {
                 "plan": tr.plan.name, "hops": len(tr.plan.hops),
+                "wire_mode": tr.tcfg.wire_mode,
                 "pairs_per_round": tr.plan.pairs_per_round,
                 "payload_bits_per_edge": per_edge,
                 "bits_per_round": nmetrics.plan_bits_per_round(

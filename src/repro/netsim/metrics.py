@@ -85,28 +85,23 @@ def qinf_wire_bits(shape, bits: int, block: int, scale_bits: int = 32) -> int:
     return rows * nb * (block * wire_bits_per_element(bits) + scale_bits)
 
 
-def sharded_payload_bits(trainer, leaves) -> int:
-    """Exact bits ONE directed edge carries per hop on the sharded neighbor
-    backend: packed u8 codes (incl. block padding) plus byte-cast scales,
-    summed over state leaves.
+def _model_local_shapes(trainer, leaves):
+    """(model_size, per-device leaf shapes) as the full-manual shard_map
+    sees them.
 
-    ``leaves`` are stacked (N, ...) leaves (arrays or ShapeDtypeStructs) in
-    ``plead.X`` order; the per-edge payload is the per-node slice.
-
-    Under the jax 0.4.x full-manual fallback a node spans model_size
-    devices and each device ppermutes its LOCAL arrays: leaves whose last
-    dim is model-sharded quantize (and pad) per slice, every other leaf is
-    ppermuted redundantly by all model_size devices — the physical edge
-    payload is model_size x the per-device bytes (which is what the HLO's
-    collective-permutes show, per device)."""
-    from repro import compat
-    from repro.core.compression import Identity
-    tcfg = trainer.tcfg
-    identity = isinstance(trainer.compressor, Identity)
-    scale_bits = 16 if tcfg.scales_bf16 else 32
+    Under the jax 0.4.x full-manual fallback (and the always-full-manual
+    bucketed wire mode) a node spans model_size devices and each device
+    ppermutes its LOCAL arrays: leaves whose last dim is model-sharded
+    quantize (and pad) per slice, every other leaf is ppermuted redundantly
+    by all model_size devices — the physical edge payload is model_size x
+    the per-device bytes (which is what the HLO's collective-permutes show,
+    per device)."""
+    # the trainer's own predicate: full-manual on 0.4.x always and for
+    # the bucketed wire path on any JAX (identity is always per-leaf)
+    full_manual = not trainer._partial_manual
     model = 1
     locals_ = [l.shape[1:] for l in leaves]      # per-node leaf shapes
-    if not compat.HAS_SHARD_MAP and trainer.mesh is not None:
+    if full_manual and trainer.mesh is not None:
         from repro.models.sharding import model_axis_size
         model = model_axis_size(trainer.mesh)
         if model > 1:
@@ -118,6 +113,23 @@ def sharded_payload_bits(trainer, leaves) -> int:
                 is_leaf=lambda s: isinstance(s, P))
             locals_ = [model_local_shape(shape, sp, model)
                        for shape, sp in zip(locals_, specs)]
+    return model, locals_
+
+
+def sharded_payload_bits(trainer, leaves) -> int:
+    """Exact bits ONE directed edge carries per hop on the sharded neighbor
+    backend: packed u8 codes (incl. block padding) plus byte-cast scales,
+    summed over state leaves.
+
+    ``leaves`` are stacked (N, ...) leaves (arrays or ShapeDtypeStructs) in
+    ``plead.X`` order; the per-edge payload is the per-node slice.  Valid
+    for BOTH wire modes: the bucketed buffers concatenate exactly the
+    per-leaf payloads (see :func:`bucketed_payload_bits`)."""
+    from repro.core.compression import Identity
+    tcfg = trainer.tcfg
+    identity = isinstance(trainer.compressor, Identity)
+    scale_bits = 16 if tcfg.scales_bf16 else 32
+    model, locals_ = _model_local_shapes(trainer, leaves)
     per_device = 0
     for l, local in zip(leaves, locals_):
         if identity:                 # raw floats, no blocking/padding
@@ -127,6 +139,28 @@ def sharded_payload_bits(trainer, leaves) -> int:
             blk = trainer._quant_block((1,) + local)
             per_device += qinf_wire_bits(local, tcfg.bits, blk, scale_bits)
     return model * per_device
+
+
+def bucketed_payload_bits(trainer, leaves) -> int:
+    """Exact bits ONE directed edge carries per hop with
+    ``wire_mode='bucketed'``, computed from the static BucketLayout: the
+    flat packed-codes buffer plus the flat byte-cast-scales buffer, times
+    the model-shard redundancy.  Byte-identical to
+    :func:`sharded_payload_bits` — the bucket concatenates exactly the
+    bytes the per-leaf path ships — and to the HLO's collective-permute
+    bytes."""
+    from repro.core import bucket
+    from repro.core.compression import Identity
+    tcfg = trainer.tcfg
+    if isinstance(trainer.compressor, Identity):
+        # identity falls back to the per-leaf wire path (raw floats)
+        return sharded_payload_bits(trainer, leaves)
+    model, locals_ = _model_local_shapes(trainer, leaves)
+    layout = bucket.compute_layout(
+        [(1,) + tuple(s) for s in locals_], [l.dtype for l in leaves],
+        bits=tcfg.bits, block_for=trainer._quant_block,
+        scale_bytes=2 if tcfg.scales_bf16 else 4)
+    return model * layout.wire_bits
 
 
 @dataclasses.dataclass

@@ -16,6 +16,23 @@ Gossip backends:
              matchings, any static sparse topology, and finite time-varying
              schedule cycles.  Collective bytes on the wire are the
              compressed payload, not dequantized floats.
+
+Wire modes on the neighbor backend (wire_mode):
+  bucketed — default: every leaf's quantization blocks map into ONE packed
+             codes buffer + ONE byte-cast scales buffer per node
+             (repro.core.bucket), so a hop is exactly 2 collective-permutes
+             regardless of leaf count, and quantize+pack / unpack+dequant+
+             mix run as fused kernels (repro.kernels).  Bit-for-bit equal
+             to per_leaf whenever both modes run the same shard_map
+             manualness: all of JAX 0.4.x, and model-unsharded meshes on
+             >= 0.6.  On >= 0.6 with a model-sharded mesh the per-leaf
+             mode stays partial-manual (full leaves, one noise draw) while
+             bucketed is full-manual (per-shard slices, per-shard draws),
+             so the stochastic-rounding streams differ — equal in
+             distribution, not bitwise.
+  per_leaf — the original path (2 x hops x leaves collectives), kept as
+             the parity oracle.  Identity compression always uses it (raw
+             float leaves move; there is nothing to bucket).
   ring     — alias of neighbor kept for older configs/CLIs (with the
              default ring topology it compiles to the same two-hop plan the
              original ring-only backend hand-coded).
@@ -52,7 +69,6 @@ from repro.core.compression import Compressor, Identity, make_compressor
 from repro.core.prox import NoneProx, Prox
 from repro.core.prox_lead import ProxLEAD, ProxLEADState
 from repro.core.oracles import OracleState
-from repro.kernels import ops as kops
 from repro.models import transformer as TR
 from repro.models.sharding import param_specs
 
@@ -83,6 +99,7 @@ class TrainerConfig:
     drop_rate: float = 0.0          # i.i.d. LinkDrop fault rate
     fault_seed: int = 0
     pack_mode: str = "lastdim"      # lastdim | flat (§Perf iteration 2)
+    wire_mode: str = "bucketed"     # bucketed | per_leaf (§Perf iteration 5)
     scales_bf16: bool = False       # §Perf iteration 3
     shard_aligned_blocks: bool = False  # §Perf iteration 4: block | shard
     tp_ways: int = 16               # model-axis width (for block alignment)
@@ -149,6 +166,11 @@ class DecentralizedTrainer:
                 raise ValueError(
                     f"the sharded neighbor backend packs QInf payloads; "
                     f"compressor {tcfg.compressor!r} needs backend='dense'")
+            from repro.optim.wire import WIRE_MODES
+            if tcfg.wire_mode not in WIRE_MODES:
+                raise ValueError(
+                    f"unknown wire_mode {tcfg.wire_mode!r}; "
+                    f"have {WIRE_MODES}")
             if tcfg.schedule != "static":
                 sched = self._schedule()
                 self.plan = topo_mod.compile_plan(sched.W_stack,
@@ -296,30 +318,40 @@ class DecentralizedTrainer:
         return Gp, (m, v)
 
     # -------------------------------------------- neighbor (shard_map) path
+    @property
+    def _partial_manual(self) -> bool:
+        """Does the gossip shard_map leave the model axis auto (GSPMD)?
+
+        Only the per-leaf wire path on JAX >= 0.6: 0.4.x rejects ppermute
+        under partial-manual, and the bucketed path's cross-dim reshapes
+        must not gather the auto model axis, so both run FULL-manual
+        (identity compression always takes the per-leaf path)."""
+        use_bucket = (self.tcfg.wire_mode == "bucketed"
+                      and not isinstance(self.compressor, Identity))
+        return compat.HAS_SHARD_MAP and not use_bucket
+
     def _quant_block(self, diff_shape) -> int:
         """Quantization block size, optionally aligned to the model shard.
 
         ``diff_shape`` is the leaf as the quantizer sees it: the full
         per-node leaf under partial-manual shard_map (model axis auto), the
-        model-LOCAL slice under the 0.4.x full-manual fallback — in the
-        latter case the slice is already shard-aligned, so no further
-        division by tp_ways applies."""
+        model-LOCAL slice under full-manual (0.4.x always; bucketed on any
+        JAX) — in the latter case the slice is already shard-aligned, so
+        no further division by tp_ways applies."""
         tcfg = self.tcfg
-        blk = tcfg.block
-        ld_cap = diff_shape[-1]
-        if ld_cap % 2 == 0 and ld_cap < blk:
-            # never pad a row past its own width: a (model-local) last dim
-            # below the block size would otherwise ship a full padded block
-            # per row on every ppermute (nibble packing needs even blocks,
-            # so odd widths keep the padded block)
-            blk = ld_cap
+        # never pad a row past its own width: a (model-local) last dim
+        # below the block size would otherwise ship a full padded block
+        # per row on every ppermute (the bucket layout reuses this exact
+        # sizing, so neither wire mode ever ships a padded block)
+        from repro.core.bucket import default_quant_block
+        blk = default_quant_block(diff_shape, tcfg.block)
         if tcfg.shard_aligned_blocks:
             # align quantization blocks to the model-shard boundary: the
             # (.., nb, blk) reshape then never crosses shards, so no gather
             # is induced.  Still a valid Assumption-2 blockwise quantizer
             # (smaller blocks -> slightly more scales, smaller C).
             ld = diff_shape[-1]
-            if compat.HAS_SHARD_MAP and ld % tcfg.tp_ways == 0:
+            if self._partial_manual and ld % tcfg.tp_ways == 0:
                 shard = ld // tcfg.tp_ways
             else:
                 shard = ld
@@ -351,13 +383,20 @@ class DecentralizedTrainer:
         eta, alpha, gamma = tcfg.eta, tcfg.alpha, tcfg.gamma
         bits = tcfg.bits
         use_q = not isinstance(self.compressor, Identity)
+        # identity ships raw float leaves — nothing to bucket
+        use_bucket = use_q and tcfg.wire_mode == "bucketed"
+        # The bucketed path concatenates and reshapes leaves across their
+        # trailing dims, which under partial-manual shard_map would force
+        # GSPMD to gather the auto (model) axis — so it always runs
+        # FULL-manual, like every mode does on 0.4.x (see below).
+        partial_manual = self._partial_manual
         # (1 + n_hops, T, n): row 0 the exact-stochastic self weight, then
         # one row per hop — receiver-indexed, per schedule round.
         wmat_np = np.concatenate(
             [plan.self_weights(np.float32)[None]]
             + [h.weights[None] for h in plan.hops], 0).astype(np.float32)
         hop_pairs = [list(h.pairs) for h in plan.hops]
-        if compat.HAS_SHARD_MAP:
+        if partial_manual:
             model_sharded_leaf = ()
         else:
             # full-manual mode: which leaves does the model axis shard?
@@ -392,10 +431,9 @@ class DecentralizedTrainer:
                 "G": treedef.flatten_up_to(Gl),
             }
             key_local = jax.random.fold_in(jax.random.wrap_key_data(k_arr), idx)
-            nX, nD, nH, nHw = [], [], [], []
-            for j, (x, d, h, hw, g) in enumerate(zip(
-                    leaves["X"], leaves["D"], leaves["H"], leaves["Hw"],
-                    leaves["G"])):
+            diffs, zs, keys = [], [], []
+            for j, (x, d, h, g) in enumerate(zip(
+                    leaves["X"], leaves["D"], leaves["H"], leaves["G"])):
                 kj = jax.random.fold_in(key_local, j)
                 if model_id is not None and model_sharded_leaf[j]:
                     # full-manual mode: decorrelate the stochastic-rounding
@@ -406,44 +444,30 @@ class DecentralizedTrainer:
                     # (check_rep is off).
                     kj = jax.random.fold_in(kj, model_id[0])
                 z = x - eta * g - eta * d
-                diff = z - h
-                if use_q:
-                    blk = self._quant_block(diff.shape)
-                    codes, scales = kops.qinf_quantize_lastdim(
-                        diff, kj, bits=bits, block=blk)
-                    if tcfg.scales_bf16:
-                        scales = scales.astype(jnp.bfloat16)
-                    if tcfg.pack_mode == "lastdim":
-                        packed = kops.pack_codes_lastdim(codes, bits=bits)
-                        unpack = lambda pk: kops.unpack_codes_lastdim(
-                            pk, bits=bits)
-                    else:  # flat: reshape across sharded dims (baseline)
-                        packed = kops.pack_codes(codes, bits=bits)
-                        unpack = lambda pk: kops.unpack_codes(
-                            pk, bits=bits, n=codes.size).reshape(codes.shape)
-                    # byte-cast scales: EVERY wire payload is u8
-                    s_wire = jax.lax.bitcast_convert_type(scales, jnp.uint8)
-                    dq = lambda pk, su8, b=blk: kops.qinf_dequantize_lastdim(
-                        unpack(pk),
-                        jax.lax.bitcast_convert_type(
-                            su8, scales.dtype).astype(jnp.float32),
-                        diff.shape, diff.dtype, block=b)
-                    # the ONLY communication: packed codes + scales, one
-                    # ppermute pair per hop of the plan
-                    recvs = [dq(pp(packed, pr), pp(s_wire, pr))
-                             for pr in hop_pairs]
-                    q_self = kops.qinf_dequantize_lastdim(
-                        codes, scales.astype(jnp.float32), diff.shape,
-                        diff.dtype, block=blk)
-                else:
-                    q_self = diff
-                    recvs = [pp(diff, pr) for pr in hop_pairs]
-                # W_t' Q for every round t' of the cycle, from the same
-                # received payloads: (T, 1, ...)
-                qstack = jnp.stack([q_self] + recvs)     # (1 + hops, 1, ...)
-                wq_all = jnp.tensordot(
-                    wmat.T, qstack.astype(jnp.float32), axes=(1, 0)
-                ).astype(diff.dtype)
+                zs.append(z)
+                diffs.append(z - h)
+                keys.append(kj)
+            # COMM: the wire exchange produces, per leaf, the dequantized
+            # self payload and W_t' Q for every round t' of the cycle
+            # ((T, ...) — bucketed moves 2 buffers per hop, per_leaf 2 per
+            # hop per leaf; identical results bit for bit)
+            from repro.optim.wire import WireExchange
+            wx = WireExchange(bits=bits, block=tcfg.block,
+                              scales_bf16=tcfg.scales_bf16,
+                              pack_mode=tcfg.pack_mode,
+                              block_for=self._quant_block)
+            if not use_q:
+                wq_list, qself_list = wx.identity(diffs, wmat, hop_pairs, pp)
+            elif use_bucket:
+                wq_list, qself_list = wx.bucketed(diffs, keys, wmat,
+                                                  hop_pairs, pp)
+            else:
+                wq_list, qself_list = wx.per_leaf(diffs, keys, wmat,
+                                                  hop_pairs, pp)
+            nX, nD, nH, nHw = [], [], [], []
+            for j, (z, d, h, hw) in enumerate(zip(
+                    zs, leaves["D"], leaves["H"], leaves["Hw"])):
+                wq_all, q_self = wq_list[j], qself_list[j]
                 zhat = h + q_self
                 if T == 1:
                     zhat_w = hw + wq_all[0]
@@ -463,16 +487,18 @@ class DecentralizedTrainer:
             unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
             return unf(nX), unf(nD), unf(nH), unf(nHw)
 
-        # Modern JAX: partial-manual shard_map — specs mention ONLY the
-        # manual (node) axes, the model-axis sharding of trailing dims stays
-        # under GSPMD (auto axes).  JAX 0.4.x: its SPMD partitioner rejects
-        # ppermute under partial-manual (hard CHECK), so the whole gossip
-        # step goes FULL-manual there: every mesh axis is manual, specs
-        # carry the per-leaf model placement (param_specs), and each model
-        # shard quantizes/ppermutes its local slice independently.
+        # Modern JAX per-leaf mode: partial-manual shard_map — specs mention
+        # ONLY the manual (node) axes, the model-axis sharding of trailing
+        # dims stays under GSPMD (auto axes).  FULL-manual everywhere else:
+        # on 0.4.x the SPMD partitioner rejects ppermute under
+        # partial-manual (hard CHECK), and the bucketed wire path reshapes
+        # across trailing dims, which must not gather the model axis —
+        # every mesh axis goes manual, specs carry the per-leaf model
+        # placement (param_specs), and each model shard quantizes/ppermutes
+        # its local slice independently.
         key_data = jax.random.key_data(key)
         node_ids = jnp.arange(tcfg.n_nodes, dtype=jnp.int32)
-        if compat.HAS_SHARD_MAP:
+        if partial_manual:
             specs = tmap(lambda l: P(naxes, *((None,) * (l.ndim - 1))),
                          plead.X)
             manual = set(naxes)
@@ -482,9 +508,17 @@ class DecentralizedTrainer:
             specs = param_specs(TR.abstract_params(self.mcfg),
                                 prepend=(naxes,))
             manual = set(self.mesh.axis_names)
-            extra_in = (P("model"),)
-            extra_args = (jnp.arange(model_axis_size(self.mesh),
-                                     dtype=jnp.int32),)
+            if model_axis_size(self.mesh) > 1:
+                extra_in = (P("model"),)
+                extra_args = (jnp.arange(model_axis_size(self.mesh),
+                                         dtype=jnp.int32),)
+            else:
+                # no model sharding -> no shard-id key folding: fold_in(k,
+                # 0) != k, and on >= 0.6 the per-leaf mode runs partial-
+                # manual WITHOUT the fold — skipping it keeps the two wire
+                # modes bit-for-bit equal on single-model-shard meshes
+                # under any JAX
+                extra_in, extra_args = (), ()
         hw_specs = specs if T == 1 else self._hw_specs(specs)
         shmapped = compat.shard_map(
             local_step, mesh=self.mesh,

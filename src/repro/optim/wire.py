@@ -1,0 +1,129 @@
+"""COMM wire path of the sharded gossip backend, factored out of the
+trainer so ``DecentralizedTrainer._sharded_update`` and the wire
+benchmarks (benchmarks/bench_wire.py) drive the exact same code.
+
+Both modes turn per-leaf difference tensors into, per leaf,
+(wq (T, *shape), qself (*shape)) where wq[t] = sum_s w[t, s] Q_s over
+sender 0 = self plus one sender per hop:
+
+  bucketed — ONE packed-codes buffer and ONE byte-cast-scales buffer per
+             node, laid out by :mod:`repro.core.bucket`; each hop is 2
+             collective-permutes regardless of leaf count, and quantize+
+             pack / unpack+dequant+mix run as fused kernels.
+  per_leaf — the original path: every leaf ppermutes its own packed codes
+             and scales (2 x hops x leaves collectives).  Kept as the
+             parity oracle; bit-for-bit equal to bucketed whenever both
+             run under the same shard_map manualness (see
+             repro.optim.decentralized's module docstring for the one
+             >= 0.6 model-sharded exception).
+
+All functions run INSIDE shard_map: leaves carry a leading local node dim
+of 1, ``pp(x, pairs)`` is the axis-bound ppermute closure, and ``wmat`` is
+the (1 + hops, T) receiver-indexed weight table (row 0 = self weight).
+
+Bitwise caveat: both modes mix through the same sender-axis dot
+(kernels.ref.weighted_mix_ref — a tensordot ON PURPOSE, because an
+unrolled multiply-add chain gets FMA-contracted shape-dependently by
+XLA's CPU backend), so codes, scales, and qself are exact and the mixes
+agree bit for bit on lane-aligned leaves (every model config in
+repro.configs).  A leaf whose last dim is not a multiple of the f32
+vector width can still differ in the LAST ULP of a T > 1 mix — the dot's
+unaligned-tail codegen varies per operand shape (tests/test_bucket.py
+pins down both behaviors).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bucket
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+WIRE_MODES = ("bucketed", "per_leaf")
+
+
+class WireExchange:
+    """One COMM exchange: diffs -> (wq leaves, qself leaves)."""
+
+    def __init__(self, *, bits: int = 2, block: int = 256,
+                 scales_bf16: bool = False, pack_mode: str = "lastdim",
+                 block_for: Optional[Callable] = None, use_pallas=None):
+        self.bits = bits
+        self.scales_bf16 = scales_bf16
+        self.pack_mode = pack_mode
+        self.block_for = block_for or functools.partial(
+            bucket.default_quant_block, block=block)
+        self.use_pallas = use_pallas
+
+    # ------------------------------------------------------------ bucketed
+    def layout(self, shapes: Sequence[Tuple[int, ...]],
+               dtypes: Sequence) -> bucket.BucketLayout:
+        return bucket.compute_layout(
+            shapes, dtypes, bits=self.bits, block_for=self.block_for,
+            scale_bytes=2 if self.scales_bf16 else 4)
+
+    def bucketed(self, diffs, keys, wmat, hop_pairs, pp):
+        layout = self.layout([d.shape for d in diffs],
+                             [d.dtype for d in diffs])
+        xbs, us = [], []
+        for d, k, sl in zip(diffs, keys, layout.slots):
+            xb = kops.blockwise_lastdim(d, block=sl.block)
+            xbs.append(xb)
+            # same key, same shape as the per-leaf quantizer's draw
+            us.append(jax.random.uniform(k, xb.shape, jnp.float32))
+        cw, sw = bucket.pack_to_wire(layout, xbs, us,
+                                     use_pallas=self.use_pallas)
+        # the ONLY communication: 2 buffers x hops, leaf-count independent
+        wires = [(cw, sw)] + [(pp(cw, pr), pp(sw, pr)) for pr in hop_pairs]
+        return bucket.mix_from_wire(layout, wires, jnp.asarray(wmat).T,
+                                    use_pallas=self.use_pallas)
+
+    # ------------------------------------------------------------ per-leaf
+    def per_leaf(self, diffs, keys, wmat, hop_pairs, pp):
+        wq: List = []
+        qs: List = []
+        bits = self.bits
+        for d, kj in zip(diffs, keys):
+            blk = self.block_for(d.shape)
+            codes, scales = kops.qinf_quantize_lastdim(
+                d, kj, bits=bits, block=blk)
+            if self.scales_bf16:
+                scales = scales.astype(jnp.bfloat16)
+            if self.pack_mode == "lastdim":
+                packed = kops.pack_codes_lastdim(codes, bits=bits)
+                unpack = lambda pk: kops.unpack_codes_lastdim(pk, bits=bits)
+            else:  # flat: reshape across sharded dims (baseline)
+                packed = kops.pack_codes(codes, bits=bits)
+                unpack = lambda pk: kops.unpack_codes(
+                    pk, bits=bits, n=codes.size).reshape(codes.shape)
+            # byte-cast scales: EVERY wire payload is u8
+            s_wire = jax.lax.bitcast_convert_type(scales, jnp.uint8)
+            dq = lambda pk, su8, b=blk: kops.qinf_dequantize_lastdim(
+                unpack(pk),
+                jax.lax.bitcast_convert_type(
+                    su8, scales.dtype).astype(jnp.float32),
+                d.shape, d.dtype, block=b)
+            recvs = [dq(pp(packed, pr), pp(s_wire, pr)) for pr in hop_pairs]
+            q_self = kops.qinf_dequantize_lastdim(
+                codes, scales.astype(jnp.float32), d.shape, d.dtype,
+                block=blk)
+            qstack = jnp.stack([q_self] + recvs)        # (1 + hops, ...)
+            wq.append(kref.weighted_mix_ref(
+                jnp.asarray(wmat).T, qstack).astype(d.dtype))
+            qs.append(q_self)
+        return wq, qs
+
+    # ------------------------------------------------------------ identity
+    def identity(self, diffs, wmat, hop_pairs, pp):
+        """C = 0 wire path: raw leaves move, no quantization."""
+        wq: List = []
+        for d in diffs:
+            recvs = [pp(d, pr) for pr in hop_pairs]
+            qstack = jnp.stack([d] + recvs)
+            wq.append(kref.weighted_mix_ref(
+                jnp.asarray(wmat).T, qstack).astype(d.dtype))
+        return wq, list(diffs)

@@ -3,7 +3,7 @@
 When hypothesis is unavailable, ``@given`` runs the test body over
 ``max_examples`` pseudo-random draws from a fixed-seed generator instead of
 skipping the property tests entirely.  Supports exactly the strategy subset
-this repo uses: integers, floats, sampled_from, lists.
+this repo uses: integers, floats, sampled_from, tuples, lists.
 """
 from __future__ import annotations
 
@@ -32,6 +32,10 @@ class strategies:
     def sampled_from(elements):
         elements = list(elements)
         return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
 
     @staticmethod
     def lists(elements, min_size=0, max_size=10):

@@ -113,7 +113,57 @@ def test_qinf_property(n, bits, scale, seed):
     assert (jnp.abs(outp - pad) <= bound[:, None] + 1e-5).all()
 
 
+class TestPallasDispatch:
+    @pytest.mark.parametrize("rows", [3, 7, 9, 13])
+    def test_ragged_rows_hit_pallas_and_match_jnp(self, rows):
+        """Regression: 2D (R, block) tensors with R % 8 != 0 used to fall
+        silently back to the jnp path; the Pallas path now pads rows to the
+        sublane tile and must produce identical codes/scales (the noise is
+        drawn on the true rows either way)."""
+        x = jax.random.normal(jax.random.key(0), (rows, 256)) * 2
+        key = jax.random.key(1)
+        qp = C.QInf(bits=2, block=256, use_pallas=True)
+        qj = C.QInf(bits=2, block=256, use_pallas=False)
+        pp, pj = qp.compress(x, key), qj.compress(x, key)
+        assert pp["codes"].shape == pj["codes"].shape == (rows, 1, 256)
+        np.testing.assert_array_equal(np.asarray(pp["codes"]),
+                                      np.asarray(pj["codes"]))
+        np.testing.assert_array_equal(np.asarray(pp["scales"]),
+                                      np.asarray(pj["scales"]))
+
+    def test_empirical_C_is_one_vmapped_call(self, monkeypatch):
+        """Regression: empirical_C must be a single vmap over the key
+        batch (it used to be a Python loop of 64 separate compress
+        dispatches) — and the vmap must batch through the Pallas compress
+        path's batching rule."""
+        calls = []
+        orig_vmap = jax.vmap
+
+        def counting_vmap(*a, **kw):
+            calls.append(1)
+            return orig_vmap(*a, **kw)
+
+        monkeypatch.setattr(jax, "vmap", counting_vmap)
+        x = jax.random.normal(jax.random.key(0), (16, 256))
+        for q in (C.QInf(bits=2, use_pallas=True), C.RandK(frac=0.2)):
+            calls.clear()
+            emp = C.empirical_C(q, x, jax.random.key(1), trials=16)
+            assert calls, "empirical_C did not go through jax.vmap"
+            # Monte-Carlo estimate of a quantity bounded by C: allow
+            # sampling noise above the bound
+            assert 0 <= emp <= 1.5 * q.C + 1e-6
+
+
 class TestRandK:
+    def test_payload_bits_index_width(self):
+        """Regression: an index costs ceil(log2(n)) bits, not 32."""
+        q = C.RandK(frac=0.1)
+        n = 784 * 10
+        k = round(0.1 * n)
+        assert q.payload_bits((784, 10)) == k * (32 + 13)   # 2^13 > 7840
+        assert q.payload_bits((1024,)) == 102 * (32 + 10)
+        assert q.payload_bits((1,)) == 1 * (32 + 1)
+
     def test_unbiased(self):
         x = jax.random.normal(jax.random.key(0), (100,))
         q = C.RandK(frac=0.3)

@@ -165,7 +165,8 @@ class TestSmallMeshLowering:
                            txt)]
         assert cps, "no ppermute found"
         u8 = [c for c in cps if c.startswith("u8[")]
-        assert len(u8) >= 8, cps[:8]
+        # default bucketed wire: one codes + one scales buffer per hop
+        assert len(u8) == 2 * len(tr.plan.hops), cps[:8]
         u8_bytes = sum(roofline._shape_bytes(c) for c in u8)
         other = sum(roofline._shape_bytes(c) for c in cps
                     if not c.startswith("u8["))
@@ -313,6 +314,113 @@ class TestNeighborBackend:
         """
         r = _run_sub(code)
         assert "REPLICA_OK" in r.stdout, r.stdout + r.stderr[-2000:]
+
+    def test_bucketed_bitforbit_equals_per_leaf(self):
+        """wire_mode='bucketed' must reproduce the per-leaf path EXACTLY —
+        same codes, same scales, same mixes — for a static ring and a
+        T > 1 schedule.  Exactness requires both modes to run the same
+        shard_map manualness: always true on 0.4.x; on >= 0.6 the (4, 2)
+        mesh runs per-leaf partial-manual vs bucketed full-manual (noise
+        drawn on different shard geometries — equal in distribution only),
+        so the model-sharded case is asserted on 0.4.x alone."""
+        code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat, configs
+        from repro.data.pipeline import DecentralizedBatches
+        from repro.optim import DecentralizedTrainer, TrainerConfig
+
+        cfg = configs.get("qwen3-1.7b").reduced(n_layers=1, d_model=64)
+        meshes = [((8, 1), 8)]
+        if not compat.HAS_SHARD_MAP:
+            meshes.append(((4, 2), 4))
+        for meshshape, n in meshes:
+            mesh = compat.make_mesh(meshshape, ("data", "model"))
+            data = DecentralizedBatches(n, 2, 16, cfg.vocab)
+            def run(wire_mode, **kw):
+                tr = DecentralizedTrainer(cfg, TrainerConfig(
+                    n_nodes=n, backend="neighbor", compressor="qinf",
+                    bits=2, eta=0.1, wire_mode=wire_mode, **kw), mesh=mesh)
+                state = tr.init_state(jax.random.key(0))
+                with compat.set_mesh(mesh):
+                    step = jax.jit(tr.train_step)
+                    for t in range(3):
+                        state, m = step(state, data.batch_at(t))
+                return state
+            for kw in (dict(topology="ring"), dict(schedule="alternating")):
+                a, b = run("per_leaf", **kw), run("bucketed", **kw)
+                exact = all(
+                    bool((np.asarray(x) == np.asarray(y)).all())
+                    for x, y in zip(jax.tree_util.tree_leaves(a.plead),
+                                    jax.tree_util.tree_leaves(b.plead)))
+                assert exact, (meshshape, kw)
+                print("BITFORBIT_OK", meshshape, sorted(kw))
+        print("BITFORBIT_ALL", 2 * len(meshes))
+        """
+        r = _run_sub(code)
+        assert "BITFORBIT_ALL" in r.stdout, r.stdout + r.stderr[-2000:]
+        want = int(r.stdout.split("BITFORBIT_ALL")[1].split()[0])
+        assert r.stdout.count("BITFORBIT_OK") == want, \
+            r.stdout + r.stderr[-2000:]
+
+    def test_bucketed_collective_count_regression(self):
+        """The bucketed path must lower to EXACTLY 2 x hops collective-
+        permutes per step — leaf-count independent — with byte-exact
+        bucket accounting, on both mesh shapes.  Fails if a change ever
+        reintroduces per-leaf collectives on the default wire path."""
+        code = """
+        import jax, jax.numpy as jnp, dataclasses, re
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat, configs
+        from repro.configs import shapes as shp
+        from repro.optim import DecentralizedTrainer, TrainerConfig
+        from repro.launch import roofline
+        from repro.netsim import metrics as nmetrics
+
+        cfg = configs.get("qwen3-1.7b").reduced(n_layers=1, d_model=64)
+        cfg = dataclasses.replace(cfg, dtype=jnp.bfloat16)
+        shape = shp.InputShape("t", 32, 8, "train")
+        CP = (r'=\\s*((?:\\([^)]*\\))|(?:[\\w\\[\\],.{}]+))\\s+'
+              r'collective-permute(?:-start)?\\(')
+        for meshshape, n in (((8, 1), 8), ((4, 2), 4)):
+            mesh = compat.make_mesh(meshshape, ("data", "model"))
+            for topo in ("ring", "exponential"):
+                tr = DecentralizedTrainer(cfg, TrainerConfig(
+                    n_nodes=n, backend="neighbor", topology=topo, bits=2,
+                    wire_mode="bucketed"), mesh=mesh)
+                state = tr.abstract_state()
+                batch = shp.train_input_specs(cfg, shape, n)
+                ns = lambda t_: jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), t_,
+                    is_leaf=lambda x: isinstance(x, P))
+                with compat.set_mesh(mesh):
+                    txt = jax.jit(tr.train_step,
+                        in_shardings=(ns(tr.state_specs(("data",))),
+                                      ns(tr.batch_specs(batch, ("data",))))
+                        ).lower(state, batch).compile().as_text()
+                cps = [m.group(1) for m in re.finditer(CP, txt)]
+                u8 = [c for c in cps if c.startswith("u8[")]
+                hops = len(tr.plan.hops)
+                nleaves = len(jax.tree_util.tree_leaves(state.plead.X))
+                assert nleaves > 2 * hops  # the claim is non-trivial
+                # gossip collectives: exactly one codes + one scales
+                # buffer per hop (GSPMD may add small non-u8 reshards on
+                # the model-sharded mesh; the gossip payloads are all u8)
+                assert len(u8) == 2 * hops, (meshshape, topo, len(u8))
+                assert len(cps) == len(u8) or meshshape == (4, 2), cps
+                # bucket accounting is byte-exact vs the HLO
+                leaves = jax.tree_util.tree_leaves(state.plead.X)
+                per_edge = nmetrics.bucketed_payload_bits(tr, leaves)
+                assert per_edge == nmetrics.sharded_payload_bits(tr, leaves)
+                from repro.models.sharding import model_axis_size
+                u8_bytes = sum(roofline._shape_bytes(c) for c in u8)
+                assert u8_bytes == (hops * per_edge / 8
+                                    / model_axis_size(mesh)), \\
+                    (meshshape, topo)
+                print("CP_COUNT_OK", meshshape, topo, len(u8))
+        """
+        r = _run_sub(code)
+        assert r.stdout.count("CP_COUNT_OK") == 4, \
+            r.stdout + r.stderr[-2000:]
 
     def test_neighbor_lowers_u8_with_exact_wire_bits(self):
         """All gossip ppermutes are packed u8 AND the HLO-parsed
