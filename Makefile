@@ -1,17 +1,23 @@
 # One-command gates for every PR.
 PY ?= python
 
-.PHONY: test bench-smoke lint ci
+.PHONY: test bench-smoke lint ci spec-golden
 
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# full PR gate: tier-1 + benchmark smoke (emits BENCH_netsim.json /
-# BENCH_comm.json / BENCH_wire.json at the repo root so the bench
-# trajectory accumulates; the wire suite runs bench_wire's bucketed vs
-# per-leaf gossip measurement in an 8-device subprocess)
-ci: test
+# golden-spec gate: every committed ExperimentSpec under tests/golden_specs
+# must JSON-round-trip exactly and build into a Runner
+spec-golden:
+	PYTHONPATH=src $(PY) -W ignore::UserWarning -m repro.api --check tests/golden_specs
+
+# full PR gate: tier-1 + spec goldens + benchmark smoke (emits
+# BENCH_netsim.json / BENCH_comm.json / BENCH_wire.json at the repo root so
+# the bench trajectory accumulates; the netsim suite drives through
+# ExperimentSpec, the wire suite measures bucketed vs per-leaf gossip in an
+# 8-device subprocess)
+ci: test spec-golden
 	PYTHONPATH=src:. $(PY) -m benchmarks.run --smoke
 
 # netsim robustness benchmark at tiny sizes (fast sanity sweep)

@@ -6,6 +6,12 @@ error, and exact bits on the wire — the netsim headline: compressed
 Prox-LEAD keeps its exact linear convergence under lossy, time-varying
 communication, paying only in rate.
 
+The whole sweep drives through the declarative experiment API: the ridge
+instance registers itself as a ``problem`` factory (the registry-extension
+pattern — no repro.* call site knows about it), every cell of the grid is
+an ``ExperimentSpec``, and ``repro.api.build`` resolves it onto the netsim
+engine.  Construction is bit-for-bit identical to the old hand-built sweep.
+
   PYTHONPATH=src:. python -m benchmarks.bench_netsim [--steps 400] [--quick]
 """
 from __future__ import annotations
@@ -17,11 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import netsim
-from repro.core import compression as C
-from repro.core import oracles, prox_lead
-from repro.core import topology as T
-from repro.core.comm import DenseMixer
+from repro import api, registry
+from repro.core import oracles
 
 DROP_RATES = (0.0, 0.1, 0.3)
 BITS = (32, 4, 2)          # 32 == uncompressed Identity
@@ -51,27 +54,53 @@ def _ridge(n=8, m=5, bs=4, p=20, lam2=0.1, het=0.3, seed=0):
     return prob, xstar, L, jnp.zeros((n, p))
 
 
-def run(steps: int = 400, verbose: bool = False):
-    prob, xstar, L, X0 = _ridge()
-    topo = T.ring(prob.n)
-    sched = netsim.static_schedule(topo)
-    rows = []
-    for bits in BITS:
+@registry.register_problem("bench_ridge")
+def _bench_ridge_problem(n_nodes: int = 8, m: int = 5, bs: int = 4,
+                         p: int = 20, lam2: float = 0.1, het: float = 0.3,
+                         seed: int = 0):
+    """The ridge instance as a registered problem, so ExperimentSpecs (and
+    any CLI) can name it — deterministic in its params, hence the specs
+    below rebuild exactly the instance whose closed form we solve."""
+    prob, _, _, X0 = _ridge(n_nodes, m, bs, p, lam2, het, seed)
+    return prob, X0
+
+
+def cell_spec(bits: int, drop: float, steps: int, *, L: float,
+              p: int) -> api.ExperimentSpec:
+    """One cell of the robustness grid as a declarative spec."""
+    if bits == 32:
+        compressor = api.CompressorSpec("identity")
+    else:
         # block == problem dim: one quantization block per row, so the
         # padded-payload accounting (payload_bits) carries zero padding
-        comp = (C.Identity() if bits == 32
-                else C.QInf(bits=bits, block=int(X0.shape[-1])))
-        gamma = 1.0 if bits == 32 else 0.5
-        alg = prox_lead.lead(1 / (2 * L), 0.5, gamma, comp,
-                             DenseMixer(topo.W), oracles.FullGradient(prob))
+        compressor = api.CompressorSpec("qinf", {"bits": bits, "block": p})
+    name = (f"qinf{bits}_drop{drop:g}" if bits != 32 else f"f32_drop{drop:g}")
+    return api.ExperimentSpec(
+        name=name, n_nodes=8, steps=steps, seed=0, fault_seed=0,
+        algorithm=api.AlgorithmSpec(
+            "lead", eta=api.constant(1 / (2 * L)), alpha=api.constant(0.5),
+            gamma=api.constant(1.0 if bits == 32 else 0.5)),
+        compressor=compressor,
+        topology=api.TopologySpec(graph="ring", schedule="static"),
+        faults=((api.FaultSpec("linkdrop", {"rate": drop}),) if drop > 0
+                else ()),
+        oracle=api.OracleSpec(name="full", problem="bench_ridge"),
+        execution=api.ExecutionSpec(engine="netsim"))
+
+
+def run(steps: int = 400, verbose: bool = False):
+    _, xstar, L, X0 = _ridge()
+    p = int(X0.shape[-1])
+    rows = []
+    for bits in BITS:
         for drop in DROP_RATES:
-            faults = (netsim.LinkDrop(drop),) if drop > 0 else ()
-            final, traj = netsim.simulate(alg, sched, faults, X0=X0,
-                                          steps=steps)
+            spec = cell_spec(bits, drop, steps, L=L, p=p)
+            assert spec == api.ExperimentSpec.from_json(spec.to_json())
+            runner = api.build(spec)
+            final, traj = runner.run()
             Xs = jnp.broadcast_to(jnp.asarray(xstar), final.X.shape)
             gap = float(jnp.sum((final.X - Xs) ** 2))
-            row = {"name": f"qinf{bits}_drop{drop:g}" if bits != 32
-                   else f"f32_drop{drop:g}",
+            row = {"name": spec.name,
                    "bits": bits, "drop_rate": drop, "steps": steps,
                    "final_gap": gap,
                    "final_consensus": float(traj.consensus[-1]),

@@ -1,1 +1,2 @@
-from repro.checkpoint.ckpt import load_state, save_state  # noqa: F401
+from repro.checkpoint.ckpt import (latest_step, load_manifest,  # noqa: F401
+                                   load_state, save_state)

@@ -44,10 +44,18 @@ def save_state(path, state, step: int = 0, extra: dict | None = None):
     return npz
 
 
+def load_manifest(path, step: int = 0) -> dict:
+    """The json manifest of one checkpoint step (keys/dtypes/shapes/extra).
+    ``extra`` carries whatever ``save_state`` was handed — runners embed the
+    originating ExperimentSpec there (see repro.api.load_checkpoint)."""
+    p = pathlib.Path(path)
+    return json.loads((p / f"manifest_{step}.json").read_text())
+
+
 def load_state(path, template, step: int = 0):
     """Restore into the structure of ``template`` (validates paths/shapes)."""
     p = pathlib.Path(path)
-    manifest = json.loads((p / f"manifest_{step}.json").read_text())
+    manifest = load_manifest(p, step)
     data = np.load(p / f"ckpt_{step}.npz")
     items, treedef = _flatten_with_paths(template)
     if [k for k, _ in items] != manifest["keys"]:

@@ -20,6 +20,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import registry
 from repro.core.comm import DenseMixer, Mixer
 from repro.core.compression import Compressor, Identity
 from repro.core.oracles import Oracle, OracleState
@@ -49,18 +50,9 @@ class Baseline:
     def step(self, state: SimpleState, key) -> SimpleState:
         raise NotImplementedError
 
-    def run(self, X0, key, num_steps, callback=None, log_every: int = 0):
-        key = jax.random.key(key) if isinstance(key, int) else key
-        k0, key = jax.random.split(key)
-        state = self.init(X0, k0)
-        step = jax.jit(self.step)
-        logs = []
-        for t in range(num_steps):
-            key, sub = jax.random.split(key)
-            state = step(state, sub)
-            if callback is not None and log_every and t % log_every == 0:
-                logs.append(callback(state, t))
-        return state, logs
+    # NOTE: there is deliberately no per-class run loop — every algorithm
+    # (all six baselines and ProxLEAD alike) drives through the one shared
+    # ``Runner.run`` in repro.api.
 
 
 @dataclasses.dataclass
@@ -221,3 +213,44 @@ class Centralized(Baseline):
         X = self.prox.tree_call(
             tmap(lambda x, g: x - self.eta * g, state.X, Gbar), self.eta)
         return SimpleState(X, state.aux, ostate, state.k + 1)
+
+
+# -- registered algorithm factories (repro.api AlgorithmSpec.name) ----------
+
+@registry.register_algorithm("dgd")
+def _dgd_factory(eta, mixer, oracle, prox=None) -> ProxDGD:
+    return ProxDGD(eta=eta, mixer=mixer, oracle=oracle,
+                   prox=prox or NoneProx())
+
+
+@registry.register_algorithm("pg_extra")
+def _pg_extra_factory(eta, mixer, oracle, prox=None) -> PGExtra:
+    return PGExtra(eta=eta, mixer=mixer, oracle=oracle,
+                   prox=prox or NoneProx())
+
+
+@registry.register_algorithm("nids_independent")
+def _nids_independent_factory(eta, mixer, oracle, prox=None) -> NIDSIndependent:
+    return NIDSIndependent(eta=eta, mixer=mixer, oracle=oracle,
+                           prox=prox or NoneProx())
+
+
+@registry.register_algorithm("choco")
+def _choco_factory(eta, mixer, oracle, compressor=None,
+                   gamma_c: float = 0.1) -> ChocoSGD:
+    return ChocoSGD(eta=eta, mixer=mixer, oracle=oracle,
+                    compressor=compressor or Identity(), gamma_c=gamma_c)
+
+
+@registry.register_algorithm("lessbit")
+def _lessbit_factory(eta, alpha, mixer, oracle, compressor=None,
+                     theta: float = 0.2) -> LessBit:
+    return LessBit(eta=eta, mixer=mixer, oracle=oracle,
+                   compressor=compressor or Identity(), theta=theta,
+                   alpha=alpha)
+
+
+@registry.register_algorithm("centralized")
+def _centralized_factory(eta, mixer, oracle, prox=None) -> Centralized:
+    return Centralized(eta=eta, mixer=mixer, oracle=oracle,
+                       prox=prox or NoneProx())

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import registry
 from repro.kernels import ops as kops
 
 Payload = Any  # pytree of arrays
@@ -62,6 +63,7 @@ class Compressor:
             treedef, [self(l, k) for l, k in zip(leaves, keys)])
 
 
+@registry.register_compressor("identity")
 @dataclasses.dataclass(frozen=True)
 class Identity(Compressor):
     """C = 0; treated as the identity operator (paper, Assumption 2)."""
@@ -82,6 +84,7 @@ class Identity(Compressor):
         return n * jnp.dtype(dtype).itemsize * 8
 
 
+@registry.register_compressor("qinf")
 @dataclasses.dataclass(frozen=True)
 class QInf(Compressor):
     """Paper eq. (21): unbiased b-bit quantization with inf-norm scaling.
@@ -155,6 +158,7 @@ class QInf(Compressor):
         return nblocks * (self.block * self.bits + 32)
 
 
+@registry.register_compressor("randk")
 @dataclasses.dataclass(frozen=True)
 class RandK(Compressor):
     """Unbiased random-k sparsification: keep k of n coords, scale by n/k."""
@@ -187,6 +191,7 @@ class RandK(Compressor):
         return k * (32 + idx_bits)  # value + index
 
 
+@registry.register_compressor("topk")
 @dataclasses.dataclass(frozen=True)
 class TopK(Compressor):
     """Biased top-k (NOT Assumption-2 compliant; included as an ablation
@@ -218,18 +223,14 @@ class TopK(Compressor):
         return k * (32 + 32)
 
 
-_REGISTRY = {
-    "identity": lambda **kw: Identity(),
-    "qinf": lambda **kw: QInf(**kw),
-    "randk": lambda **kw: RandK(**kw),
-    "topk": lambda **kw: TopK(**kw),
-}
-
-
 def make_compressor(name: str, **kwargs) -> Compressor:
-    if name not in _REGISTRY:
-        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[name](**kwargs)
+    """Build a registered compressor by name.
+
+    Strict on both axes (repro.registry): an unknown name raises listing the
+    registered compressors; an unknown kwarg raises listing what the factory
+    accepts — nothing is silently dropped.
+    """
+    return registry.make("compressor", name, **kwargs)
 
 
 def empirical_C(comp: Compressor, x: jax.Array, key: jax.Array, trials: int = 64):

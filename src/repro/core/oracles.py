@@ -19,6 +19,8 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import registry
+
 
 @dataclasses.dataclass(frozen=True)
 class FiniteSumProblem:
@@ -79,10 +81,12 @@ class Oracle:
         return self.problem.full_grad(X), state
 
 
+@registry.register_oracle("full")
 class FullGradient(Oracle):
     name = "full"
 
 
+@registry.register_oracle("sgd")
 class SGD(Oracle):
     """General stochastic setting: one uniformly sampled batch per node."""
     name = "sgd"
@@ -98,6 +102,7 @@ class SGD(Oracle):
         return G, state
 
 
+@registry.register_oracle("lsvrg")
 class LSVRG(Oracle):
     """Loopless SVRG (Kovalev et al. 2020), per paper Table 1."""
     name = "lsvrg"
@@ -132,6 +137,7 @@ class LSVRG(Oracle):
         return G, OracleState(state.kind, new_ref, new_ref_grad)
 
 
+@registry.register_oracle("saga")
 class SAGA(Oracle):
     """SAGA with per-batch stored gradients (paper Table 1).
 
@@ -171,7 +177,5 @@ class SAGA(Oracle):
 
 
 def make_oracle(name: str, problem: FiniteSumProblem, **kw) -> Oracle:
-    table = {"full": FullGradient, "sgd": SGD, "lsvrg": LSVRG, "saga": SAGA}
-    if name not in table:
-        raise ValueError(f"unknown oracle {name!r}")
-    return table[name](problem, **kw)
+    """Build a registered oracle by name over ``problem``; strict kwargs."""
+    return registry.make("oracle", name, problem=problem, **kw)

@@ -13,6 +13,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import registry
+
 
 class Prox:
     name: str = "none"
@@ -31,6 +33,7 @@ class Prox:
                    for l in jax.tree_util.tree_leaves(tree))
 
 
+@registry.register_prox("none")
 @dataclasses.dataclass(frozen=True)
 class NoneProx(Prox):
     """r = 0: prox is the identity (Prox-LEAD reduces to LEAD)."""
@@ -43,6 +46,7 @@ class NoneProx(Prox):
         return jnp.float32(0.0)
 
 
+@registry.register_prox("l1")
 @dataclasses.dataclass(frozen=True)
 class L1(Prox):
     """r(x) = lam ||x||_1: soft-thresholding."""
@@ -57,6 +61,7 @@ class L1(Prox):
         return self.lam * jnp.sum(jnp.abs(x))
 
 
+@registry.register_prox("l2sq")
 @dataclasses.dataclass(frozen=True)
 class L2Sq(Prox):
     """r(x) = (lam/2) ||x||^2: shrinkage x / (1 + eta lam)."""
@@ -70,6 +75,7 @@ class L2Sq(Prox):
         return 0.5 * self.lam * jnp.sum(x ** 2)
 
 
+@registry.register_prox("elastic_net")
 @dataclasses.dataclass(frozen=True)
 class ElasticNet(Prox):
     """r(x) = lam1 ||x||_1 + (lam2/2)||x||^2."""
@@ -85,6 +91,7 @@ class ElasticNet(Prox):
         return self.lam1 * jnp.sum(jnp.abs(x)) + 0.5 * self.lam2 * jnp.sum(x ** 2)
 
 
+@registry.register_prox("group_lasso")
 @dataclasses.dataclass(frozen=True)
 class GroupLasso(Prox):
     """r(x) = lam * sum_g ||x_g||_2 with groups along the last axis."""
@@ -101,6 +108,7 @@ class GroupLasso(Prox):
         return self.lam * jnp.sum(jnp.sqrt(jnp.sum(x ** 2, axis=-1) + 1e-24))
 
 
+@registry.register_prox("nonneg")
 @dataclasses.dataclass(frozen=True)
 class NonNeg(Prox):
     """r = indicator of the nonnegative orthant: projection."""
@@ -114,10 +122,5 @@ class NonNeg(Prox):
 
 
 def make_prox(name: Optional[str], **kw) -> Prox:
-    if name in (None, "none"):
-        return NoneProx()
-    table = {"l1": L1, "l2sq": L2Sq, "elastic_net": ElasticNet,
-             "group_lasso": GroupLasso, "nonneg": NonNeg}
-    if name not in table:
-        raise ValueError(f"unknown prox {name!r}")
-    return table[name](**kw)
+    """Build a registered prox by name (None -> NoneProx); strict kwargs."""
+    return registry.make("prox", name or "none", **kw)

@@ -19,6 +19,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import registry
 from repro.core.comm import CommState, Mixer, comm, init_comm_state
 from repro.core.compression import Compressor, Identity
 from repro.core.oracles import Oracle, OracleState
@@ -104,19 +105,6 @@ class ProxLEAD:
         X = self.prox.tree_call(V, eta)                                     # line 10
         return ProxLEADState(X, D, cstate, ostate, state.k + 1)
 
-    def run(self, X0, key, num_steps: int, callback=None, log_every: int = 0):
-        """Python-loop driver (used by benchmarks; jit-compiles step)."""
-        k0, key = jax.random.split(jax.random.key(key) if isinstance(key, int) else key)
-        state = self.init(X0, k0)
-        step = jax.jit(self.step)
-        logs = []
-        for t in range(num_steps):
-            key, sub = jax.random.split(key)
-            state = step(state, sub)
-            if callback is not None and log_every and (t % log_every == 0):
-                logs.append(callback(state, t))
-        return state, logs
-
 
 def lead(eta, alpha, gamma, compressor, mixer, oracle, **kw) -> ProxLEAD:
     """LEAD (Algorithm 3) == Prox-LEAD with R = 0."""
@@ -143,3 +131,28 @@ def diminishing_schedules(mu, L, C, lambda_max, kappa_f, kappa_g):
         return eta(k) * mu / (2 * (1 + C) ** 2 * lambda_max)
 
     return eta, alpha, gamma
+
+
+# -- registered algorithm factories (repro.api AlgorithmSpec.name) ----------
+# Shared context convention: factories receive the subset of
+# (eta, alpha, gamma, compressor, prox, mixer, oracle) they declare, plus
+# any AlgorithmSpec.params (strict).  The driver loop is repro.api's
+# Runner.run — algorithms only expose init/step.
+
+@registry.register_algorithm("prox_lead")
+def _prox_lead_factory(eta, alpha, gamma, compressor, prox, mixer, oracle,
+                       allow_biased: bool = False) -> ProxLEAD:
+    return ProxLEAD(eta, alpha, gamma, compressor, prox, mixer, oracle,
+                    allow_biased=allow_biased)
+
+
+@registry.register_algorithm("lead")
+def _lead_factory(eta, alpha, gamma, compressor, mixer, oracle,
+                  allow_biased: bool = False) -> ProxLEAD:
+    return lead(eta, alpha, gamma, compressor, mixer, oracle,
+                allow_biased=allow_biased)
+
+
+@registry.register_algorithm("nids")
+def _nids_factory(eta, mixer, oracle, prox=None) -> ProxLEAD:
+    return nids(eta, mixer, oracle, prox)

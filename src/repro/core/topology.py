@@ -11,6 +11,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import registry
+
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
@@ -328,19 +330,22 @@ def compile_plan(W_stack, name: str = "plan") -> ExchangePlan:
     return plan
 
 
+registry.register_topology("ring")(ring)
+registry.register_topology("fully_connected")(fully_connected)
+registry.register_topology("star")(star)
+registry.register_topology("expander")(expander)
+registry.register_topology("exponential")(exponential)
+
+
+@registry.register_topology("torus2d")
+def _torus2d_by_n(n: int, rows: Optional[int] = None) -> Topology:
+    """torus2d keyed by node count (rows defaults to the square-ish split)."""
+    rows = int(np.sqrt(n)) if rows is None else rows
+    assert n % rows == 0
+    return torus2d(rows, n // rows)
+
+
 def make_topology(name: str, n: int, **kw) -> Topology:
-    if name == "ring":
-        return ring(n, **kw)
-    if name == "fully_connected":
-        return fully_connected(n)
-    if name == "star":
-        return star(n)
-    if name == "torus2d":
-        rows = kw.pop("rows", int(np.sqrt(n)))
-        assert n % rows == 0
-        return torus2d(rows, n // rows)
-    if name == "expander":
-        return expander(n, **kw)
-    if name == "exponential":
-        return exponential(n)
-    raise ValueError(f"unknown topology {name!r}")
+    """Build a registered topology by name (strict: unknown names and
+    unknown kwargs raise with the valid options)."""
+    return registry.make("topology", name, n=n, **kw)

@@ -103,3 +103,50 @@ def logreg_problem(lam2: float = 0.005, lam1: float = 0.0, **kw):
 
     grad_batch = jax.grad(loss_batch)
     return FiniteSumProblem(grad_batch, data, n, m, loss_batch)
+
+
+# ---------------------------------------------------------------------------
+# Registered problem factories (repro.api OracleSpec.problem)
+#
+# Contract: factory(n_nodes, **params) -> (FiniteSumProblem, X0) with X0 the
+# stacked zero iterate (n_nodes, ...) the runners start from.
+# ---------------------------------------------------------------------------
+
+from repro import registry  # noqa: E402  (import-light; no cycle)
+
+
+@registry.register_problem("logreg")
+def _logreg_flat_problem(n_nodes: int = 8, n_features: int = 784,
+                         n_classes: int = 10, n_per_node: int = 150,
+                         n_batches: int = 15, lam2: float = 0.005,
+                         seed: int = 0, noniid: bool = True):
+    """Paper §5 logistic regression over FLATTENED (p*C,) parameters —
+    the shape every dense benchmark/example runs (one quantization block
+    stream per node, no per-row padding)."""
+    from repro.core.oracles import FiniteSumProblem
+    base = logreg_problem(lam2=lam2, n_nodes=n_nodes, n_per_node=n_per_node,
+                          n_features=n_features, n_classes=n_classes,
+                          n_batches=n_batches, seed=seed, noniid=noniid)
+
+    def grad_flat(x, b):
+        return base.grad_batch(x.reshape(n_features, n_classes), b).reshape(-1)
+
+    def loss_flat(x, b):
+        return base.loss_batch(x.reshape(n_features, n_classes), b)
+
+    flat = FiniteSumProblem(grad_flat, base.data, base.n, base.m, loss_flat)
+    return flat, jnp.zeros((n_nodes, n_features * n_classes))
+
+
+@registry.register_problem("logreg2d")
+def _logreg_2d_problem(n_nodes: int = 8, n_features: int = 50,
+                       n_classes: int = 5, n_per_node: int = 40,
+                       n_batches: int = 5, lam2: float = 0.05,
+                       seed: int = 0, noniid: bool = True):
+    """Logistic regression with natural (p, C) iterates (launch.simulate's
+    setting: blockwise quantization runs along the class axis)."""
+    prob = logreg_problem(lam2=lam2, n_nodes=n_nodes, n_per_node=n_per_node,
+                          n_features=n_features, n_classes=n_classes,
+                          n_batches=n_batches, seed=seed, noniid=noniid)
+    dtype = jnp.float64 if jax.config.x64_enabled else jnp.float32
+    return prob, jnp.zeros((n_nodes, n_features, n_classes), dtype)

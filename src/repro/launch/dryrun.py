@@ -29,6 +29,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import api  # noqa: E402
 from repro import compat  # noqa: E402
 from repro import configs  # noqa: E402
 from repro.configs import shapes as shp  # noqa: E402
@@ -36,7 +37,7 @@ from repro.launch import mesh as mesh_mod  # noqa: E402
 from repro.launch import roofline  # noqa: E402
 from repro.models import transformer as TR  # noqa: E402
 from repro.models.sharding import node_axes, param_specs  # noqa: E402
-from repro.optim import DecentralizedTrainer, TrainerConfig  # noqa: E402
+
 
 tmap = jax.tree_util.tree_map
 
@@ -55,11 +56,27 @@ def lower_train(cfg, shape, mesh, backend="dense", bits=2,
                 shard_aligned_blocks=False, topology="ring"):
     N = mesh_mod.n_nodes(mesh)
     naxes = node_axes(mesh)
-    tcfg = TrainerConfig(n_nodes=N, compressor="qinf", bits=bits,
-                         backend=backend, pack_mode=pack_mode,
-                         scales_bf16=scales_bf16, topology=topology,
-                         shard_aligned_blocks=shard_aligned_blocks)
-    tr = DecentralizedTrainer(cfg, tcfg, mesh=mesh)
+    # one flag->spec layer shared with train.py/simulate.py/benchmarks: the
+    # dryrun sweep is an ExperimentSpec too (cfg arrives prebuilt because
+    # the sweep applies ad-hoc arch overrides)
+    exec_params = {}
+    if scales_bf16:
+        exec_params["scales_bf16"] = True
+    if shard_aligned_blocks:
+        exec_params["shard_aligned_blocks"] = True
+    spec = api.ExperimentSpec(
+        name=f"dryrun-{backend}-{topology}", n_nodes=N,
+        # eta/alpha/gamma pinned to TrainerConfig's defaults so the lowered
+        # program's scalar constants match the pre-spec dryrun exactly
+        algorithm=api.AlgorithmSpec("prox_lead", eta=api.constant(1e-2),
+                                    alpha=api.constant(0.5),
+                                    gamma=api.constant(1.0)),
+        compressor=api.CompressorSpec("qinf", {"bits": bits}),
+        topology=api.TopologySpec(graph=topology),
+        execution=api.ExecutionSpec(engine="sharded", backend=backend,
+                                    pack_mode=pack_mode,
+                                    params=exec_params))
+    tr = api.build_trainer_runner(spec, model_cfg=cfg, mesh=mesh).trainer
     state = tr.abstract_state()
     batch = shp.train_input_specs(cfg, shape, N)
     state_specs = tr.state_specs(naxes)

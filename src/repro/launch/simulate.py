@@ -10,6 +10,11 @@ Schedules: static | alternating | random_matching | markov_drop[:drop]
 Faults (comma-separated): linkdrop:RATE | straggler:RATE | noise:SIGMA
 Algos: prox-lead | lead | nids | dgd | pg-extra | choco | lessbit
 Compressors: qinf:BITS | randk:FRAC | identity
+
+Every flag is an alias for an ExperimentSpec field (repro.api): the driver
+resolves the flags into a spec (printable with --print-spec, replayable with
+--spec FILE) and executes it through the shared Runner protocol on the
+netsim engine.
 """
 from __future__ import annotations
 
@@ -21,35 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as B
-from repro.core import compression as C
-from repro.core import oracles, prox_lead
-from repro.core import prox as proxmod
-from repro.core import topology as topo_mod
-from repro.core.comm import DenseMixer
-from repro.data.synthetic import logreg_problem
-from repro.netsim import engine, faults as faults_mod, schedule as sched_mod
-
-
-def make_compressor(spec: str) -> C.Compressor:
-    name, _, arg = spec.partition(":")
-    if name == "identity":
-        return C.Identity()
-    if name == "qinf":
-        return C.QInf(bits=int(arg) if arg else 2)
-    if name == "randk":
-        return C.RandK(frac=float(arg) if arg else 0.1)
-    raise ValueError(f"unknown compressor {spec!r}")
-
-
-def make_schedule(spec: str, n: int, base: str, rounds: int,
-                  seed: int) -> sched_mod.TopologySchedule:
-    name, _, arg = spec.partition(":")
-    kw = {}
-    if name == "markov_drop":
-        kw["drop"] = float(arg) if arg else 0.1
-    return sched_mod.make_schedule(name, n, base=base, rounds=rounds,
-                                   seed=seed, **kw)
+from repro import api
+from repro.netsim import faults as faults_mod
 
 
 def solve_reference(problem, shape, lam1: float, L: float,
@@ -72,26 +50,33 @@ def solve_reference(problem, shape, lam1: float, L: float,
     return np.asarray(xstar)
 
 
-def make_algo(name: str, eta: float, compressor: C.Compressor,
-              prox: proxmod.Prox, mixer, oracle):
-    if name == "prox-lead":
-        return prox_lead.ProxLEAD(eta, 0.5, 0.5, compressor, prox, mixer,
-                                  oracle)
-    if name == "lead":
-        return prox_lead.lead(eta, 0.5, 0.5, compressor, mixer, oracle)
-    if name == "nids":
-        return prox_lead.nids(eta, mixer, oracle, prox)
-    if name == "dgd":
-        return B.ProxDGD(eta=eta, mixer=mixer, oracle=oracle, prox=prox)
-    if name == "pg-extra":
-        return B.PGExtra(eta=eta, mixer=mixer, oracle=oracle, prox=prox)
-    if name == "choco":
-        return B.ChocoSGD(eta=eta, mixer=mixer, oracle=oracle,
-                          compressor=compressor, gamma_c=0.2)
-    if name == "lessbit":
-        return B.LessBit(eta=eta, mixer=mixer, oracle=oracle,
-                         compressor=compressor)
-    raise ValueError(f"unknown algo {name!r}")
+def spec_from_args(args) -> api.ExperimentSpec:
+    """Resolve the legacy CLI flags into an ExperimentSpec (netsim engine).
+
+    Per-algorithm defaults preserved from the pre-spec driver: gamma = 0.5
+    for (prox-)lead, Choco's gossip stepsize gamma_c = 0.2, eta = 1/(2L)
+    for the strongly-convex logreg instance.
+    """
+    L = 0.5 + 2 * args.lam2          # rows normalized: softmax Hessian bound
+    eta = 1.0 / (2 * L)
+    spec = api.ExperimentSpec.from_flags(
+        args, engine="netsim", name=f"simulate-{args.algo}",
+        fault_seed=args.seed + 1)
+    algo_name = spec.algorithm.name
+    params = {"gamma_c": 0.2} if algo_name == "choco" else {}
+    algorithm = dataclasses.replace(
+        spec.algorithm, eta=api.constant(eta), gamma=api.constant(0.5),
+        params=params)
+    compressor = spec.compressor
+    if compressor.name == "qinf" and args.classes < compressor.params.get(
+            "block", 256):
+        # blockwise quantization runs along the last axis; cap the block at
+        # the iterate's last dim so the wire payload carries no padding
+        # (payload_bits counts the padded codes actually produced)
+        compressor = api.CompressorSpec(
+            "qinf", {**compressor.params, "block": int(args.classes)})
+    return dataclasses.replace(spec, algorithm=algorithm,
+                               compressor=compressor)
 
 
 def main(argv=None):
@@ -119,36 +104,47 @@ def main(argv=None):
     ap.add_argument("--lam2", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the resolved ExperimentSpec JSON and exit")
+    ap.add_argument("--spec", default=None,
+                    help="run a saved ExperimentSpec JSON file instead of "
+                         "the flags (the spec wins on every field, incl. "
+                         "the lam2/l1 the reference solve uses)")
     args = ap.parse_args(argv)
 
     jax.config.update("jax_enable_x64", True)
 
-    n = args.nodes
-    problem = logreg_problem(lam2=args.lam2, n_nodes=n, n_per_node=40,
-                             n_features=args.features, n_classes=args.classes,
-                             n_batches=5, seed=args.seed)
-    shape = (args.features, args.classes)
-    L = 0.5 + 2 * args.lam2          # rows normalized: softmax Hessian bound
-    eta = 1.0 / (2 * L)
-    xstar = solve_reference(problem, shape, args.l1, L)
+    spec = (api.ExperimentSpec.load(args.spec) if args.spec
+            else spec_from_args(args))
+    if spec.execution.engine != "netsim":
+        raise SystemExit(
+            f"simulate drives the netsim engine; spec "
+            f"{spec.name!r} has engine={spec.execution.engine!r} "
+            f"(use repro.launch.train / repro.api.build for it)")
+    if args.print_spec:
+        print(spec.to_json())
+        return None
+    runner = api.build(spec)
+
+    # the reference solve follows the SPEC (which is the experiment), not
+    # the flag defaults — a replayed --spec file carries its own lam2/l1
+    oracle_spec = api.default_oracle_spec(spec)
+    lam2 = oracle_spec.problem_params.get("lam2", args.lam2)
+    l1 = (spec.prox.params.get("lam", 0.0)
+          if spec.prox.name == "l1" else 0.0)
+    if spec.prox.name not in ("l1", "none"):
+        raise SystemExit(
+            f"simulate's closed-form reference solve handles l1/none "
+            f"proxes; spec has {spec.prox.name!r}")
+
+    n = spec.n_nodes
+    problem = runner.problem
+    shape = tuple(runner.X0.shape[1:])
+    L = 0.5 + 2 * lam2
+    xstar = solve_reference(problem, shape, l1, L)
     fstar = float(problem.full_loss(
         jnp.broadcast_to(jnp.asarray(xstar), (n,) + shape))
-        + args.l1 * np.abs(xstar).sum())
-
-    schedule = make_schedule(args.schedule, n, args.topology, args.rounds,
-                             args.seed)
-    schedule.validate()
-    faults = faults_mod.make_faults(args.fault)
-    compressor = make_compressor(args.compressor)
-    if isinstance(compressor, C.QInf) and shape[-1] < compressor.block:
-        # blockwise quantization runs along the last axis; cap the block at
-        # the iterate's last dim so the wire payload carries no padding
-        # (payload_bits counts the padded codes actually produced)
-        compressor = dataclasses.replace(compressor, block=int(shape[-1]))
-    prox = proxmod.L1(lam=args.l1) if args.l1 > 0 else proxmod.NoneProx()
-    oracle = oracles.make_oracle(args.oracle, problem)
-    placeholder = DenseMixer(topo_mod.make_topology(args.topology, n).W)
-    algo = make_algo(args.algo, eta, compressor, prox, placeholder, oracle)
+        + l1 * np.abs(xstar).sum())
 
     def objective_fn(X):
         # gap at the node average: F(xbar) - F* >= 0 (per-node losses can
@@ -156,22 +152,26 @@ def main(argv=None):
         xbar = X.mean(0)
         Xbar = jnp.broadcast_to(xbar[None], X.shape)
         return (problem.full_loss(Xbar)
-                + args.l1 * jnp.sum(jnp.abs(xbar))) - fstar
+                + l1 * jnp.sum(jnp.abs(xbar))) - fstar
 
+    schedule = runner.schedule
+    schedule.validate()
+    compressor = getattr(runner.algo, "compressor", None)
     dim = int(np.prod(shape))
-    C_eff = faults_mod.effective_C(faults, getattr(compressor, "C", 0.0), dim)
+    C_eff = faults_mod.effective_C(runner.faults,
+                                   getattr(compressor, "C", 0.0), dim)
+    fault_desc = ",".join(f.name for f in runner.faults)
     print(f"schedule={schedule.name} T_cycle={schedule.T_cycle} "
           f"joint_spectral_gap={schedule.joint_spectral_gap():.4f}")
-    print(f"faults=[{args.fault or '-'}] mean_edge_survival="
-          f"{faults_mod.mean_edge_survival(faults):.3f} "
+    print(f"faults=[{fault_desc or '-'}] mean_edge_survival="
+          f"{faults_mod.mean_edge_survival(runner.faults):.3f} "
           f"effective_C={C_eff:.3g}")
-    print(f"algo={args.algo} compressor={args.compressor} "
-          f"oracle={args.oracle} n={n} dim={dim} steps={args.steps}")
+    print(f"algo={spec.algorithm.name} compressor={spec.compressor.name}"
+          f"{spec.compressor.params} oracle={oracle_spec.name} "
+          f"n={n} dim={dim} steps={spec.steps}")
 
     t0 = time.time()
-    final, traj = engine.simulate(algo, schedule, faults, X0=jnp.zeros(
-        (n,) + shape), steps=args.steps, seed=args.seed,
-        fault_seed=args.seed + 1, objective_fn=objective_fn)
+    final, traj = runner.run(objective_fn=objective_fn)
     dt = time.time() - t0
 
     s = traj.summary()

@@ -4,6 +4,11 @@ CPU-scale by default (reduced configs); pass --full on a real TPU pod.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
       --nodes 8 --steps 200 --bits 2 --prox l1 --lam 1e-5
+
+All flags are aliases for ExperimentSpec fields (repro.api): the driver
+builds a spec, prints it with --print-spec, and runs it through the shared
+Runner protocol.  Checkpoints embed the spec, so
+``repro.api.load_checkpoint`` reconstructs the exact experiment.
 """
 from __future__ import annotations
 
@@ -12,11 +17,7 @@ import time
 
 import jax
 
-from repro import configs
-from repro.checkpoint import save_state
-from repro.core.prox import make_prox
-from repro.data.pipeline import DecentralizedBatches
-from repro.optim import DecentralizedTrainer, TrainerConfig
+from repro import api
 
 
 def main(argv=None):
@@ -30,54 +31,63 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--gamma", type=float, default=1.0)
     ap.add_argument("--compressor", default="qinf",
-                    choices=["qinf", "identity"])
+                    choices=["qinf", "identity", "randk", "topk"])
     ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--frac", type=float, default=0.1,
+                    help="randk/topk kept fraction")
+    ap.add_argument("--allow-biased", action="store_true",
+                    help="opt in to biased compressors (topk violates "
+                         "Assumption 2; ablations only)")
     ap.add_argument("--prox", default="none")
     ap.add_argument("--lam", type=float, default=1e-5)
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "neighbor", "ring"])
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="full (non-reduced) model config")
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the resolved ExperimentSpec JSON and exit")
     args = ap.parse_args(argv)
 
-    cfg = configs.get(args.arch)
-    if not args.full:
-        cfg = cfg.reduced(n_layers=args.layers, d_model=args.d_model)
-    prox = make_prox(args.prox if args.prox != "none" else None,
-                     **({"lam": args.lam} if args.prox in ("l1", "l2sq")
-                        else {}))
-    tcfg = TrainerConfig(n_nodes=args.nodes, eta=args.eta, alpha=args.alpha,
-                         gamma=args.gamma, compressor=args.compressor,
-                         bits=args.bits, prox=prox)
-    trainer = DecentralizedTrainer(cfg, tcfg)
-    state = trainer.init_state(jax.random.key(0))
-    data = DecentralizedBatches(
-        args.nodes, args.local_batch, args.seq_len, cfg.vocab,
-        family=cfg.family, n_vision_tokens=cfg.n_vision_tokens,
-        d_model=cfg.d_model, dtype=cfg.dtype)
+    spec = api.ExperimentSpec.from_flags(args, engine="sharded")
+    if args.print_spec:
+        print(spec.to_json())
+        return None
+    runner = api.build(spec)
+    state = runner.init_state(jax.random.key(0))
+    data = runner.default_data()
 
-    step_fn = jax.jit(trainer.train_step)
     bits_per_step = None
     t0 = time.time()
     for t in range(args.steps):
-        state, metrics = step_fn(state, data.batch_at(t))
+        state, metrics = runner.step(state, data.batch_at(t))
         if bits_per_step is None:
             # per-leaf accounting: payload_bits blocks along each leaf's
             # last dim (incl. padding), so a flattened total undercounts
             from repro.netsim.metrics import payload_bits_per_node
             bits_per_step = payload_bits_per_node(
-                trainer.compressor, state.plead.X)
+                runner.trainer.compressor, state.plead.X)
         if t % args.log_every == 0 or t == args.steps - 1:
             print(f"step {t:5d}  loss {float(metrics['loss']):.4f}  "
                   f"consensus {float(metrics['consensus']):.3e}  "
                   f"({(time.time() - t0) / (t + 1):.2f}s/step)")
-    comm_gb = bits_per_step / 8e9 * args.steps
-    print(f"done: {args.steps} steps; ~{comm_gb:.3f} GB communicated/node "
-          f"({args.compressor}, {args.bits}-bit)" if bits_per_step else "done")
+    if bits_per_step is not None:
+        # bits_per_step is only measured once a step has run (--steps 0
+        # leaves it None: nothing was communicated, so nothing to report)
+        comm_gb = bits_per_step / 8e9 * args.steps
+        desc = (f"{args.compressor}, {args.bits}-bit"
+                if args.compressor == "qinf" else args.compressor)
+        print(f"done: {args.steps} steps; ~{comm_gb:.3f} GB "
+              f"communicated/node ({desc})")
+    else:
+        print("done")
     if args.ckpt:
-        save_state(args.ckpt, state, step=args.steps)
+        runner.save(args.ckpt, state, step=args.steps)
         print("checkpoint saved to", args.ckpt)
     return state
 

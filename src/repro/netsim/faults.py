@@ -33,6 +33,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import registry
+
 
 class FaultModel:
     """Base: no-op fault.  Subclasses override any of the hooks below."""
@@ -63,6 +65,7 @@ class FaultModel:
         return C
 
 
+@registry.register_fault("linkdrop")
 @dataclasses.dataclass(frozen=True)
 class LinkDrop(FaultModel):
     """Each edge independently drops its payload with probability ``rate``;
@@ -81,6 +84,7 @@ class LinkDrop(FaultModel):
         return 1.0 - self.rate
 
 
+@registry.register_fault("straggler")
 @dataclasses.dataclass(frozen=True)
 class Straggler(FaultModel):
     """Each node independently skips its send with probability ``rate``.
@@ -107,6 +111,7 @@ class Straggler(FaultModel):
         return 1.0 - self.rate                        # sender-side failures
 
 
+@registry.register_fault("noise")
 @dataclasses.dataclass(frozen=True)
 class NoisyChannel(FaultModel):
     """Mean-zero noise bounded by sigma * ||q_i||_inf on node i's payload.
@@ -162,13 +167,12 @@ def make_fault(spec: str) -> FaultModel:
     """Parse 'name[:param]' — e.g. 'linkdrop:0.1', 'straggler:0.05',
     'noise:0.01'."""
     name, _, arg = spec.partition(":")
-    table = {"linkdrop": (LinkDrop, "rate"),
-             "straggler": (Straggler, "rate"),
-             "noise": (NoisyChannel, "sigma")}
-    if name not in table:
-        raise ValueError(f"unknown fault {name!r}; have {sorted(table)}")
-    cls, field = table[name]
-    return cls(**({field: float(arg)} if arg else {}))
+    # the positional CLI arg maps onto the factory's first tunable field
+    # (rate for linkdrop/straggler, sigma for noise)
+    kw = {}
+    if arg:
+        kw[registry.accepts("fault", name)[0]] = float(arg)
+    return registry.make("fault", name, **kw)
 
 
 def make_faults(specs: str) -> tuple:

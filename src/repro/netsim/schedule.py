@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import registry
 from repro.core import topology as topo_mod
 from repro.core.comm import Mixer, _exact_stochastic
 
@@ -170,26 +171,42 @@ def markov_drop_schedule(topo: topo_mod.Topology, drop: float = 0.1,
                             np.stack(mats))
 
 
-_SCHEDULES = ("static", "alternating", "random_matching", "markov_drop")
+@registry.register_schedule("static")
+def _static_by_name(n: int, base: str = "ring") -> TopologySchedule:
+    return static_schedule(topo_mod.make_topology(base, n))
+
+
+@registry.register_schedule("alternating")
+def _alternating_by_name(n: int, base: str = "ring",
+                         with_: str = "exponential") -> TopologySchedule:
+    topos = [topo_mod.make_topology(base, n)] + [
+        topo_mod.make_topology(t, n) for t in with_.split("+")]
+    return alternating_schedule(topos)
+
+
+@registry.register_schedule("random_matching")
+def _random_matching_by_name(n: int, rounds: int = 32,
+                             seed: int = 0) -> TopologySchedule:
+    return random_matching_schedule(n, rounds=rounds, seed=seed)
+
+
+@registry.register_schedule("markov_drop")
+def _markov_drop_by_name(n: int, base: str = "ring", rounds: int = 32,
+                         seed: int = 0, drop: float = 0.1,
+                         sticky: float = 0.0) -> TopologySchedule:
+    return markov_drop_schedule(topo_mod.make_topology(base, n), drop=drop,
+                                rounds=rounds, seed=seed, sticky=sticky)
 
 
 def make_schedule(name: str, n: int, *, base: str = "ring", rounds: int = 32,
                   seed: int = 0, **kw) -> TopologySchedule:
-    """Build a named schedule; ``base`` names the underlying topology
-    (any ``repro.core.topology.make_topology`` name)."""
-    if name == "static":
-        return static_schedule(topo_mod.make_topology(base, n))
-    if name == "alternating":
-        others = kw.pop("with_", "exponential")
-        topos = [topo_mod.make_topology(base, n)] + [
-            topo_mod.make_topology(t, n) for t in others.split("+")]
-        return alternating_schedule(topos)
-    if name == "random_matching":
-        return random_matching_schedule(n, rounds=rounds, seed=seed)
-    if name == "markov_drop":
-        return markov_drop_schedule(topo_mod.make_topology(base, n),
-                                    rounds=rounds, seed=seed, **kw)
-    raise ValueError(f"unknown schedule {name!r}; have {_SCHEDULES}")
+    """Build a registered schedule by name; ``base`` names the underlying
+    topology (any ``repro.core.topology.make_topology`` name).  The shared
+    context (base/rounds/seed) is offered to every factory and consumed by
+    the ones that use it; explicit ``kw`` entries are strict."""
+    ctx = registry.kwargs_subset("schedule", name,
+                                 {"base": base, "rounds": rounds, "seed": seed})
+    return registry.make("schedule", name, n=n, **ctx, **kw)
 
 
 # ---------------------------------------------------------------------------

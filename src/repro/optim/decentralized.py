@@ -128,9 +128,15 @@ class DecentralizedTrainer:
         self.tcfg = tcfg
         self.mesh = mesh
         self.topo = topo_mod.make_topology(tcfg.topology, tcfg.n_nodes)
-        kw = {"qinf": {"bits": tcfg.bits, "block": tcfg.block},
-              "randk": {"frac": tcfg.frac}, "topk": {"frac": tcfg.frac},
-              }.get(tcfg.compressor, {})
+        # registry-driven construction: each compressor factory's signature
+        # declares which of the flat config knobs it consumes (bits/block
+        # for qinf, frac for randk/topk, nothing for identity) — and an
+        # unknown compressor name fails loudly in make_compressor instead
+        # of silently mapping to an empty kwargs set.
+        from repro import registry
+        kw = registry.kwargs_subset(
+            "compressor", tcfg.compressor,
+            {"bits": tcfg.bits, "block": tcfg.block, "frac": tcfg.frac})
         self.compressor: Compressor = make_compressor(tcfg.compressor, **kw)
         self.prox = tcfg.prox or NoneProx()
         self.plan: Optional[topo_mod.ExchangePlan] = None

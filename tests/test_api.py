@@ -1,0 +1,452 @@
+"""The declarative experiment API (repro.api + repro.registry).
+
+Covers: spec JSON round-trip (incl. every committed golden spec), registry
+strictness, the shared Runner protocol across all three engines, bit-for-bit
+construction parity of spec-built runners vs hand-built algorithms, the
+legacy-flag alias layer, and checkpoints that embed (and survive with) the
+originating spec.
+"""
+import argparse
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, registry
+from repro.core import oracles, prox_lead
+from repro.core import prox as proxmod
+from repro.core import topology as topo_mod
+from repro.core.comm import DenseMixer
+from repro.core.compression import QInf, RandK, make_compressor
+from repro.netsim import engine as netsim_engine
+
+GOLDEN = pathlib.Path(__file__).parent / "golden_specs"
+
+TINY = {"n_features": 8, "n_classes": 3, "n_per_node": 8, "n_batches": 2}
+
+
+def tiny_spec(**over):
+    base = dict(
+        name="tiny", n_nodes=4, steps=4, seed=0,
+        algorithm=api.AlgorithmSpec("prox_lead", eta=api.constant(0.05),
+                                    gamma=api.constant(0.5)),
+        compressor=api.CompressorSpec("qinf", {"bits": 2, "block": 3}),
+        topology=api.TopologySpec(graph="ring"),
+        prox=api.ProxSpec("l1", {"lam": 1e-3}),
+        oracle=api.OracleSpec(name="full", problem="logreg2d",
+                              problem_params=TINY),
+        execution=api.ExecutionSpec(engine="dense"))
+    base.update(over)
+    return api.ExperimentSpec(**base)
+
+
+def leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# Spec serialization
+# ---------------------------------------------------------------------------
+
+class TestSpecRoundTrip:
+    def test_default_spec(self):
+        s = api.ExperimentSpec()
+        assert s == api.ExperimentSpec.from_json(s.to_json())
+
+    def test_rich_spec(self):
+        s = tiny_spec(
+            faults=(api.FaultSpec("linkdrop", {"rate": 0.1}),
+                    api.FaultSpec("noise", {"sigma": 0.01})),
+            topology=api.TopologySpec(graph="exponential",
+                                      schedule="markov_drop", rounds=8,
+                                      schedule_params={"drop": 0.2}),
+            execution=api.ExecutionSpec(engine="netsim"))
+        again = api.ExperimentSpec.from_json(s.to_json())
+        assert s == again and s.diff(again) == {}
+
+    def test_mesh_tuple_survives_json(self):
+        s = tiny_spec(execution=api.ExecutionSpec(engine="sharded",
+                                                  backend="neighbor",
+                                                  mesh=(4, 2)),
+                      model=api.ModelSpec(n_layers=1, d_model=64),
+                      oracle=None,
+                      algorithm=api.AlgorithmSpec("prox_lead"))
+        again = api.ExperimentSpec.from_json(s.to_json())
+        assert again.execution.mesh == (4, 2)
+        assert s == again
+
+    def test_harmonic_schedule(self):
+        s = api.ScheduleSpec("harmonic", 0.1, t0=16.0)
+        f = s.resolve()
+        assert f(0) == pytest.approx(0.1)
+        assert f(16) == pytest.approx(0.05)
+        with pytest.raises(ValueError, match="constant"):
+            s.constant()
+        assert api.ScheduleSpec.coerce(0.3).constant() == pytest.approx(0.3)
+
+    def test_diff_reports_dotted_paths(self):
+        a = tiny_spec()
+        b = dataclasses.replace(
+            a, steps=9, compressor=api.CompressorSpec("qinf", {"bits": 4,
+                                                              "block": 3}))
+        d = a.diff(b)
+        assert d["steps"] == (4, 9)
+        assert d["compressor.params.bits"] == (2, 4)
+        assert "name" not in d
+
+    def test_golden_specs_roundtrip_and_build(self):
+        files = sorted(GOLDEN.glob("*.json"))
+        assert len(files) >= 6, "golden spec set went missing"
+        for f in files:
+            spec = api.check_spec_file(f)   # raises on round-trip/build fail
+            assert isinstance(spec, api.ExperimentSpec)
+
+    def test_spec_save_load(self, tmp_path):
+        s = tiny_spec()
+        p = s.save(tmp_path / "s.json")
+        assert api.ExperimentSpec.load(p) == s
+
+
+# ---------------------------------------------------------------------------
+# Registry strictness
+# ---------------------------------------------------------------------------
+
+class TestRegistryStrictness:
+    def test_unknown_compressor_name(self):
+        with pytest.raises(ValueError, match="unknown compressor"):
+            make_compressor("nope")
+
+    def test_unknown_compressor_kwarg(self):
+        with pytest.raises(ValueError, match="does not accept"):
+            make_compressor("identity", bits=2)
+        with pytest.raises(ValueError, match="does not accept"):
+            make_compressor("qinf", frac=0.5)
+
+    def test_unknown_prox_and_fault(self):
+        with pytest.raises(ValueError, match="unknown prox"):
+            registry.make("prox", "nope")
+        with pytest.raises(ValueError, match="does not accept"):
+            registry.make("fault", "linkdrop", sigma=0.1)
+
+    def test_spec_build_propagates_strictness(self):
+        s = tiny_spec(compressor=api.CompressorSpec("qinf", {"frac": 0.5}))
+        with pytest.raises(ValueError, match="does not accept"):
+            api.build(s)
+
+    def test_registration_extends_api(self):
+        @registry.register_compressor("test_only_scaler")
+        @dataclasses.dataclass(frozen=True)
+        class Scaler:
+            scale: float = 2.0
+
+        try:
+            c = registry.make("compressor", "test_only_scaler", scale=3.0)
+            assert c.scale == 3.0
+            name, params = api.parse_component("compressor",
+                                               "test_only_scaler:3")
+            assert name == "test_only_scaler" and params == {"scale": 3}
+        finally:
+            registry._REGISTRIES["compressor"].pop("test_only_scaler")
+
+    def test_kwargs_subset_matches_old_table(self):
+        cand = {"bits": 3, "block": 64, "frac": 0.2}
+        assert registry.kwargs_subset("compressor", "qinf", cand) == \
+            {"bits": 3, "block": 64}
+        assert registry.kwargs_subset("compressor", "randk", cand) == \
+            {"frac": 0.2}
+        assert registry.kwargs_subset("compressor", "identity", cand) == {}
+
+
+# ---------------------------------------------------------------------------
+# Runners: shared protocol + construction parity
+# ---------------------------------------------------------------------------
+
+class TestDenseRunner:
+    def test_prox_lead_bitforbit_vs_handbuilt(self):
+        """build(spec).run == the pre-refactor hand-built ProxLEAD loop."""
+        spec = tiny_spec()
+        runner = api.build(spec)
+        got, _ = runner.run(num_steps=5)
+
+        problem, X0 = registry.make("problem", "logreg2d", n_nodes=4, **TINY)
+        algo = prox_lead.ProxLEAD(
+            0.05, 0.5, 0.5, QInf(bits=2, block=3), proxmod.L1(lam=1e-3),
+            DenseMixer(topo_mod.make_topology("ring", 4).W),
+            oracles.FullGradient(problem))
+        key = jax.random.key(0)
+        k0, key = jax.random.split(key)
+        state = algo.init(X0, k0)
+        step = jax.jit(algo.step)
+        for _ in range(5):
+            key, sub = jax.random.split(key)
+            state = step(state, sub)
+        assert leaves_equal(got.X, state.X)
+        assert leaves_equal(got.D, state.D)
+        assert leaves_equal(got.comm, state.comm)
+
+    def test_all_six_baselines_share_runner_run(self):
+        """Every baseline drives through the one Runner.run loop (their
+        per-class loops are deleted) and stays finite."""
+        from repro.core import baselines as B
+        assert not hasattr(B.Baseline, "run")
+        assert not hasattr(prox_lead.ProxLEAD, "run")
+        for name in ("dgd", "pg_extra", "nids_independent", "choco",
+                     "lessbit", "centralized"):
+            spec = tiny_spec(
+                algorithm=api.AlgorithmSpec(name, eta=api.constant(0.05),
+                                            alpha=api.constant(0.5)),
+                compressor=api.CompressorSpec("qinf", {"bits": 4,
+                                                       "block": 3}),
+                prox=api.ProxSpec("none"))
+            runner = api.build(spec)
+            state, _ = runner.run(num_steps=3)
+            assert int(state.k) >= 3
+            assert all(np.isfinite(np.asarray(l)).all()
+                       for l in jax.tree_util.tree_leaves(state.X))
+
+    def test_runner_protocol_surface(self):
+        runner = api.build(tiny_spec())
+        state = runner.init_state(jax.random.key(1))
+        state = runner.step(state, jax.random.key(2))
+        fns = runner.metrics_fns
+        assert set(fns) >= {"consensus", "iteration"}
+        c = float(fns["consensus"](state))
+        assert np.isfinite(c)
+        specs = runner.state_specs()
+        assert specs is not None
+        assert jax.tree_util.tree_structure(specs) is not None
+
+    def test_runner_for_wraps_existing_algo(self):
+        problem, X0 = registry.make("problem", "logreg2d", n_nodes=4, **TINY)
+        algo = prox_lead.nids(0.05,
+                              DenseMixer(topo_mod.make_topology("ring", 4).W),
+                              oracles.FullGradient(problem))
+        st, _ = api.runner_for(algo, X0).run(key=0, num_steps=3)
+        assert int(st.k) >= 3
+
+    def test_dense_rejects_schedules_and_faults(self):
+        with pytest.raises(ValueError, match="netsim"):
+            api.build(tiny_spec(
+                topology=api.TopologySpec(graph="ring",
+                                          schedule="alternating")))
+        with pytest.raises(ValueError, match="netsim"):
+            api.build(tiny_spec(
+                faults=(api.FaultSpec("linkdrop", {"rate": 0.1}),)))
+
+
+class TestNetsimRunner:
+    def _spec(self):
+        return tiny_spec(
+            name="netsim-tiny", steps=6, seed=2, fault_seed=3,
+            topology=api.TopologySpec(graph="ring", schedule="alternating"),
+            faults=(api.FaultSpec("linkdrop", {"rate": 0.2}),),
+            execution=api.ExecutionSpec(engine="netsim"))
+
+    def test_bitforbit_vs_direct_simulate(self):
+        spec = self._spec()
+        runner = api.build(spec)
+        final, traj = runner.run()
+
+        problem, X0 = registry.make("problem", "logreg2d", n_nodes=4, **TINY)
+        from repro.netsim.schedule import make_schedule
+        from repro.netsim.faults import LinkDrop
+        algo = prox_lead.ProxLEAD(
+            0.05, 0.5, 0.5, QInf(bits=2, block=3), proxmod.L1(lam=1e-3),
+            DenseMixer(topo_mod.make_topology("ring", 4).W),
+            oracles.FullGradient(problem))
+        f2, t2 = netsim_engine.simulate(
+            algo, make_schedule("alternating", 4, base="ring", rounds=32,
+                                seed=2),
+            (LinkDrop(0.2),), X0=X0, steps=6, seed=2, fault_seed=3)
+        assert leaves_equal(final.X, f2.X)
+        np.testing.assert_array_equal(traj.bits, t2.bits)
+        np.testing.assert_array_equal(traj.consensus, t2.consensus)
+
+    def test_step_protocol_runs(self):
+        runner = api.build(self._spec())
+        st = runner.init_state(jax.random.key(0))
+        st = runner.step(st, jax.random.key(1))
+        assert int(st.k) >= 1
+
+
+class TestTrainerRunner:
+    @pytest.fixture(scope="class")
+    def trainer_spec(self):
+        return api.ExperimentSpec(
+            name="trainer-tiny", n_nodes=2, steps=2, seed=0,
+            algorithm=api.AlgorithmSpec("prox_lead", eta=api.constant(0.2)),
+            compressor=api.CompressorSpec("qinf", {"bits": 2}),
+            topology=api.TopologySpec(graph="ring"),
+            model=api.ModelSpec(arch="qwen3-1.7b", n_layers=1, d_model=64,
+                                local_batch=2, seq_len=16),
+            execution=api.ExecutionSpec(engine="sharded", backend="dense"))
+
+    def test_trainer_config_mapping(self, trainer_spec):
+        from repro.optim.decentralized import TrainerConfig
+        tcfg = api.trainer_config_from_spec(trainer_spec)
+        ref = TrainerConfig(n_nodes=2, eta=0.2, compressor="qinf", bits=2,
+                            prox=tcfg.prox)
+        assert tcfg == ref
+
+    def test_trainer_config_strictness(self, trainer_spec):
+        with pytest.raises(ValueError, match="Prox-LEAD"):
+            api.trainer_config_from_spec(dataclasses.replace(
+                trainer_spec, algorithm=api.AlgorithmSpec("dgd")))
+        with pytest.raises(ValueError, match="no TrainerConfig field"):
+            api.trainer_config_from_spec(dataclasses.replace(
+                trainer_spec,
+                execution=api.ExecutionSpec(engine="sharded",
+                                            params={"warp_drive": 9})))
+        with pytest.raises(ValueError, match="linkdrop"):
+            api.trainer_config_from_spec(dataclasses.replace(
+                trainer_spec,
+                faults=(api.FaultSpec("noise", {"sigma": 0.1}),)))
+        with pytest.raises(ValueError, match="constant"):
+            api.trainer_config_from_spec(dataclasses.replace(
+                trainer_spec,
+                algorithm=api.AlgorithmSpec(
+                    "prox_lead", eta=api.ScheduleSpec("harmonic", 0.1))))
+
+    def test_bitforbit_vs_handbuilt_trainer(self, trainer_spec):
+        """Spec-built TrainerRunner == hand-built DecentralizedTrainer."""
+        from repro import configs
+        from repro.data.pipeline import DecentralizedBatches
+        from repro.optim import DecentralizedTrainer, TrainerConfig
+
+        runner = api.build(trainer_spec)
+        state = runner.init_state(jax.random.key(0))
+        data = runner.default_data()
+        for t in range(2):
+            state, m = runner.step(state, data.batch_at(t))
+
+        cfg = configs.get("qwen3-1.7b").reduced(n_layers=1, d_model=64)
+        tr = DecentralizedTrainer(cfg, TrainerConfig(
+            n_nodes=2, eta=0.2, compressor="qinf", bits=2))
+        s2 = tr.init_state(jax.random.key(0))
+        d2 = DecentralizedBatches(2, 2, 16, cfg.vocab, family=cfg.family,
+                                  n_vision_tokens=cfg.n_vision_tokens,
+                                  d_model=cfg.d_model, dtype=cfg.dtype)
+        step = jax.jit(tr.train_step)
+        for t in range(2):
+            s2, _ = step(s2, d2.batch_at(t))
+        assert leaves_equal(state, s2)
+
+    def test_runner_run_and_metrics(self, trainer_spec):
+        runner = api.build(trainer_spec)
+        state, logs = runner.run(
+            num_steps=2, callback=lambda st, m, t: float(m["loss"]),
+            log_every=1)
+        assert int(state.step) == 2
+        assert len(logs) == 2 and all(np.isfinite(l) for l in logs)
+        assert np.isfinite(float(runner.metrics_fns["consensus"](state)))
+        sp = runner.state_specs(("data",))
+        assert jax.tree_util.tree_structure(sp) == \
+            jax.tree_util.tree_structure(runner.abstract_state())
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints embed the spec; training continues bit-for-bit
+# ---------------------------------------------------------------------------
+
+class TestCheckpointRoundTrip:
+    def test_trainer_state_roundtrip_with_spec(self, tmp_path):
+        spec = api.ExperimentSpec(
+            name="ckpt-tiny", n_nodes=2, steps=2, seed=0,
+            algorithm=api.AlgorithmSpec("prox_lead", eta=api.constant(0.2)),
+            compressor=api.CompressorSpec("qinf", {"bits": 2}),
+            model=api.ModelSpec(arch="qwen3-1.7b", n_layers=1, d_model=64,
+                                local_batch=2, seq_len=16),
+            execution=api.ExecutionSpec(engine="sharded", backend="dense"))
+        runner = api.build(spec)
+        data = runner.default_data()
+        state = runner.init_state(jax.random.key(0))
+        for t in range(2):
+            state, _ = runner.step(state, data.batch_at(t))
+        runner.save(tmp_path, state, step=2)
+
+        # the embedded spec survives the trip and rebuilds the experiment
+        runner2, state2, step = api.load_checkpoint(tmp_path)
+        assert step == 2
+        assert runner2.spec == spec
+        assert leaves_equal(state, state2)
+
+        # training continues bit-for-bit from the restored state
+        cont_a, _ = runner.step(state, data.batch_at(2))
+        cont_b, _ = runner2.step(state2, runner2.default_data().batch_at(2))
+        assert leaves_equal(cont_a, cont_b)
+
+    def test_missing_spec_raises(self, tmp_path):
+        from repro.checkpoint import save_state
+        save_state(tmp_path, {"a": jnp.ones((2,))}, step=0)
+        with pytest.raises(ValueError, match="embeds no ExperimentSpec"):
+            api.load_checkpoint(tmp_path, step=0)
+
+    def test_dense_runner_checkpoint(self, tmp_path):
+        spec = tiny_spec()
+        runner = api.build(spec)
+        state, _ = runner.run(num_steps=2)
+        runner.save(tmp_path, state, step=2)
+        runner2, state2, _ = api.load_checkpoint(tmp_path, step=2)
+        assert runner2.spec == spec
+        nxt_a = runner.step(state, jax.random.key(7))
+        nxt_b = runner2.step(state2, jax.random.key(7))
+        assert leaves_equal(nxt_a, nxt_b)
+
+
+# ---------------------------------------------------------------------------
+# Legacy-flag alias layer
+# ---------------------------------------------------------------------------
+
+class TestFromFlags:
+    def test_train_style_flags(self):
+        args = argparse.Namespace(
+            arch="qwen3-1.7b", nodes=4, steps=7, local_batch=2, seq_len=16,
+            eta=0.1, alpha=0.5, gamma=1.0, compressor="randk", frac=0.25,
+            allow_biased=False, prox="l1", lam=1e-4, topology="ring",
+            backend="neighbor", seed=3, full=False, d_model=64, layers=1)
+        spec = api.ExperimentSpec.from_flags(args, engine="sharded")
+        assert spec.compressor == api.CompressorSpec("randk", {"frac": 0.25})
+        assert spec.prox == api.ProxSpec("l1", {"lam": 1e-4})
+        assert spec.execution.backend == "neighbor"
+        assert spec.model.d_model == 64 and spec.n_nodes == 4
+        assert spec.seed == 3 and spec.steps == 7
+        assert spec.algorithm.eta.constant() == pytest.approx(0.1)
+
+    def test_simulate_style_flags(self):
+        args = argparse.Namespace(
+            schedule="markov_drop:0.2", topology="exponential", rounds=8,
+            fault="linkdrop:0.1,noise:0.01", algo="pg-extra",
+            compressor="qinf:4", oracle="sgd", steps=11, nodes=8,
+            features=10, classes=3, l1=0.01, lam2=0.05, seed=5)
+        spec = api.ExperimentSpec.from_flags(args, engine="netsim")
+        assert spec.algorithm.name == "pg_extra"
+        assert spec.compressor == api.CompressorSpec("qinf", {"bits": 4})
+        assert spec.topology.schedule == "markov_drop"
+        assert spec.topology.schedule_params == {"drop": 0.2}
+        assert spec.topology.graph == "exponential"
+        assert spec.faults == (api.FaultSpec("linkdrop", {"rate": 0.1}),
+                               api.FaultSpec("noise", {"sigma": 0.01}))
+        assert spec.prox == api.ProxSpec("l1", {"lam": 0.01})
+        assert spec.oracle.name == "sgd"
+        assert spec.oracle.problem_params["n_features"] == 10
+        assert spec.seed == 5
+
+    def test_topk_requires_allow_biased_end_to_end(self):
+        args = argparse.Namespace(compressor="topk", frac=0.1,
+                                  allow_biased=False, nodes=2, steps=1,
+                                  arch="qwen3-1.7b", d_model=64, layers=1)
+        spec = api.ExperimentSpec.from_flags(args, engine="sharded")
+        with pytest.raises(ValueError, match="biased"):
+            api.build(spec)
+        args.allow_biased = True
+        spec = api.ExperimentSpec.from_flags(args, engine="sharded")
+        runner = api.build(spec)
+        from repro.core.compression import TopK
+        assert isinstance(runner.trainer.compressor, TopK)

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import baselines as B
 from repro.core import compression as C
 from repro.core import oracles, prox_lead
@@ -29,7 +30,7 @@ def test_dgd_converges_with_bias(ridge):
     mixer = DenseMixer(T.ring(prob.n).W)
     alg = B.ProxDGD(eta=1 / (4 * L), mixer=mixer,
                     oracle=oracles.FullGradient(prob))
-    st, _ = alg.run(X0, 0, 3000)
+    st, _ = api.runner_for(alg, X0).run(key=0, num_steps=3000)
     so = _subopt(st.X, xstar)
     assert 1e-8 < so < 5.0  # stalls at a biased point, neither exact nor diverging
 
@@ -39,7 +40,7 @@ def test_nids_exact(ridge):
     mixer = DenseMixer(T.ring(prob.n).W)
     alg = B.NIDSIndependent(eta=1 / (2 * L), mixer=mixer,
                             oracle=oracles.FullGradient(prob))
-    st, _ = alg.run(X0, 0, 1200)
+    st, _ = api.runner_for(alg, X0).run(key=0, num_steps=1200)
     assert _subopt(st.X, xstar) < 1e-10
 
 
@@ -48,7 +49,7 @@ def test_pg_extra_exact(ridge):
     mixer = DenseMixer(T.ring(prob.n).W)
     alg = B.PGExtra(eta=1 / (4 * L), mixer=mixer,
                     oracle=oracles.FullGradient(prob))
-    st, _ = alg.run(X0, 0, 3000)
+    st, _ = api.runner_for(alg, X0).run(key=0, num_steps=3000)
     assert _subopt(st.X, xstar) < 1e-8
 
 
@@ -69,7 +70,7 @@ def test_nids_matches_lead_reduction(ridge):
         st_lead = step(st_lead, sub)
     nids_alg = B.NIDSIndependent(eta=eta, mixer=mixer,
                                  oracle=oracles.FullGradient(prob))
-    st_nids, _ = nids_alg.run(X0, 0, 1200)
+    st_nids, _ = api.runner_for(nids_alg, X0).run(key=0, num_steps=1200)
     assert _subopt(st_lead.X, xstar) < 1e-9
     assert _subopt(st_nids.X, xstar) < 1e-9
 
@@ -80,7 +81,7 @@ def test_choco_converges_neighborhood(ridge):
     alg = B.ChocoSGD(eta=1 / (8 * L), mixer=mixer,
                      oracle=oracles.FullGradient(prob),
                      compressor=C.QInf(bits=4, block=64), gamma_c=0.2)
-    st, _ = alg.run(X0, 0, 4000)
+    st, _ = api.runner_for(alg, X0).run(key=0, num_steps=4000)
     so = _subopt(st.X, xstar)
     assert so < 5.0  # Choco with constant eta: biased neighborhood
 
@@ -91,7 +92,7 @@ def test_lessbit_linear(ridge):
     alg = B.LessBit(eta=1 / (4 * L), mixer=mixer,
                     oracle=oracles.FullGradient(prob),
                     compressor=C.QInf(bits=2, block=64), theta=0.2, alpha=0.5)
-    st, _ = alg.run(X0, 0, 4000)
+    st, _ = api.runner_for(alg, X0).run(key=0, num_steps=4000)
     assert _subopt(st.X, xstar) < 1e-8
 
 
@@ -100,7 +101,7 @@ def test_centralized_reference(ridge):
     mixer = DenseMixer(T.ring(prob.n).W)
     alg = B.Centralized(eta=1 / L, mixer=mixer,
                         oracle=oracles.FullGradient(prob))
-    st, _ = alg.run(X0, 0, 1500)
+    st, _ = api.runner_for(alg, X0).run(key=0, num_steps=1500)
     assert _subopt(st.X, xstar) < 1e-10
 
 
@@ -122,5 +123,5 @@ def test_prox_lead_beats_lessbit_periter(ridge):
         st = step(st, sub)
     lb = B.LessBit(eta=eta, mixer=mixer, oracle=oracles.FullGradient(prob),
                    compressor=q, theta=0.2, alpha=0.5)
-    st_lb, _ = lb.run(X0, 0, 1000)
+    st_lb, _ = api.runner_for(lb, X0).run(key=0, num_steps=1000)
     assert _subopt(st.X, xstar) < _subopt(st_lb.X, xstar)
