@@ -1,23 +1,29 @@
 # One-command gates for every PR.
 PY ?= python
 
-.PHONY: test bench-smoke lint ci spec-golden
+.PHONY: test bench-smoke lint ci spec-golden docs-check
 
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# golden-spec gate: every committed ExperimentSpec under tests/golden_specs
-# must JSON-round-trip exactly and build into a Runner
+# golden-spec gate: every committed ExperimentSpec/SweepSpec under
+# tests/golden_specs must JSON-round-trip exactly and build into a Runner
 spec-golden:
 	PYTHONPATH=src $(PY) -W ignore::UserWarning -m repro.api --check tests/golden_specs
 
-# full PR gate: tier-1 + spec goldens + benchmark smoke (emits
-# BENCH_netsim.json / BENCH_comm.json / BENCH_wire.json at the repo root so
-# the bench trajectory accumulates; the netsim suite drives through
-# ExperimentSpec, the wire suite measures bucketed vs per-leaf gossip in an
-# 8-device subprocess)
-ci: test spec-golden
+# docs gate: every [[...]] and src/repro/... path/symbol reference in
+# docs/*.md and README.md must resolve against the working tree
+docs-check:
+	$(PY) tools/docs_check.py docs README.md
+
+# full PR gate: tier-1 + spec goldens + docs references + benchmark smoke
+# (emits BENCH_netsim.json / BENCH_comm.json / BENCH_wire.json /
+# BENCH_sweep.json at the repo root so the bench trajectory accumulates;
+# the netsim suite drives grouped one-jit sweeps through ExperimentSpec,
+# the wire suite measures bucketed vs per-leaf gossip in an 8-device
+# subprocess, the sweep suite gates one-jit-vs-serial parity + speedup)
+ci: test spec-golden docs-check
 	PYTHONPATH=src:. $(PY) -m benchmarks.run --smoke
 
 # netsim robustness benchmark at tiny sizes (fast sanity sweep)

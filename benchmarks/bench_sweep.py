@@ -1,0 +1,138 @@
+"""Sweep-engine benchmark: one-jit grid vs serial per-point loop.
+
+A 16-point dense LEAD grid (8 seeds x {2,4}-bit QInf) on a reduced §5
+logistic-regression instance, executed two ways:
+
+* serial — the pre-sweep pattern: ``api.build(point).run()`` per point,
+  i.e. 16 traces, 16 compiles, ``16 x steps`` host dispatches;
+* sweep  — ``repro.sweep``: ONE jitted computation for the whole grid
+  (plus the ``batch='vmap'`` throughput mode, timed for comparison).
+
+Parity is the hard constraint: every grid point of the sweep run must be
+bit-for-bit equal to its serial run (the ``parity`` column; also pinned by
+tests/test_sweep.py).  Writes BENCH_sweep.json through ``run.py --smoke``.
+
+  PYTHONPATH=src:. python -m benchmarks.bench_sweep [--steps 60]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro import api
+from repro import sweep as sweep_mod
+
+N_SEEDS = 8
+BITS = (2, 4)
+
+
+def grid_spec(steps: int) -> api.SweepSpec:
+    base = api.ExperimentSpec(
+        name="sweep_logreg", n_nodes=8, steps=steps, seed=0,
+        algorithm=api.AlgorithmSpec("lead", eta=api.constant(0.05),
+                                    alpha=api.constant(0.5),
+                                    gamma=api.constant(0.5)),
+        compressor=api.CompressorSpec("qinf", {"bits": 2, "block": 64}),
+        topology=api.TopologySpec(graph="ring"),
+        oracle=api.OracleSpec(name="full", problem="logreg",
+                              problem_params={"n_features": 16,
+                                              "n_classes": 4,
+                                              "n_per_node": 30,
+                                              "n_batches": 5}),
+        execution=api.ExecutionSpec(engine="dense"))
+    return api.SweepSpec(
+        name="bench_sweep", base=base,
+        axes=(api.AxisSpec("seed", tuple(range(N_SEEDS))),
+              api.AxisSpec("compressor.bits", BITS)))
+
+
+def _leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def run(steps: int = 60, verbose: bool = False):
+    spec = grid_spec(steps)
+    points = spec.points()
+
+    # serial loop: per-point build + run, each with its own trace/compile
+    t0 = time.time()
+    serial_states = []
+    for p in points:
+        st, _ = api.build(p).run()
+        serial_states.append(jax.block_until_ready(st))
+    serial_s = time.time() - t0
+
+    # one-jit sweep (wall includes its single trace + compile)
+    runner = api.build(spec)
+    final, res = runner.run()
+    sweep_s = res.wall_s
+
+    parity = all(_leaves_equal(runner.point_state(final, i), st)
+                 for i, st in enumerate(serial_states))
+
+    # vmap throughput mode (documented last-ulp on CPU; timed, not gated)
+    vrunner = sweep_mod.SweepRunner(points, batch="vmap")
+    vfinal, vres = vrunner.run()
+    vmap_s = vres.wall_s
+
+    rows = [{"mode": "serial-loop", "points": len(points), "steps": steps,
+             "wall_s": round(serial_s, 2), "traces": len(points),
+             "speedup_vs_serial": 1.0, "parity_vs_serial": True},
+            {"mode": "sweep-map", "points": len(points), "steps": steps,
+             "wall_s": round(sweep_s, 2), "traces": runner.traces,
+             "speedup_vs_serial": round(serial_s / sweep_s, 2),
+             "parity_vs_serial": parity},
+            {"mode": "sweep-vmap", "points": len(points), "steps": steps,
+             "wall_s": round(vmap_s, 2), "traces": vrunner.traces,
+             "speedup_vs_serial": round(serial_s / vmap_s, 2),
+             "parity_vs_serial": all(
+                 np.allclose(np.asarray(vrunner.point_state(vfinal, i).X),
+                             np.asarray(st.X), rtol=1e-12, atol=1e-12)
+                 for i, st in enumerate(serial_states))}]
+    if verbose:
+        for r in rows:
+            print(f"  {r['mode']:12s} {r['wall_s']:7.2f}s  "
+                  f"traces={r['traces']:2d}  "
+                  f"speedup={r['speedup_vs_serial']:.2f}x  "
+                  f"parity={r['parity_vs_serial']}")
+    return rows
+
+
+def validate(rows):
+    by = {r["mode"]: r for r in rows}
+    checks = [
+        ("16-point grid runs as ONE jitted computation (1 trace)",
+         by["sweep-map"]["traces"] == 1, by["sweep-map"]["traces"]),
+        ("every sweep grid point bit-for-bit equals its serial run",
+         by["sweep-map"]["parity_vs_serial"],
+         by["sweep-map"]["parity_vs_serial"]),
+        ("one-jit sweep beats the serial loop wall-clock",
+         by["sweep-map"]["speedup_vs_serial"] > 1.0,
+         f"{by['sweep-map']['speedup_vs_serial']}x"),
+    ]
+    return checks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args(argv)
+    jax.config.update("jax_enable_x64", True)
+    rows = run(args.steps, verbose=True)
+    n_fail = 0
+    for claim, ok, detail in validate(rows):
+        n_fail += not ok
+        print(f"[{'PASS' if ok else 'FAIL'}] {claim}   [{detail}]")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,44 +4,49 @@ Paper setting: 8 machines on a ring (mixing weight 1/3), MNIST-like non-iid
 (label-sorted) data, m=15 mini-batches/node, lambda2=0.005 (+lambda1=0.005
 in the non-smooth case), 2-bit blockwise (256) inf-norm quantization,
 alpha=0.5 gamma=1.0 for (Prox-)LEAD.
+
+Execution goes through the declarative experiment API end to end: every
+figure row is an :func:`paper_cell` ``ExperimentSpec`` (no hand-built
+algorithm objects), and :func:`run_cells` batches rows that share one
+structure into ``repro.sweep`` one-jit groups — a ``seeds > 1`` request
+sweeps every row over a seed axis inside the same single trace and averages
+the suboptimality curves.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as B
+from repro import api
+from repro import sweep as sweep_mod
 from repro.core import compression as C
-from repro.core import oracles, prox_lead
-from repro.core import prox as proxmod
 from repro.core import topology as T
 from repro.core.comm import DenseMixer
-from repro.data.synthetic import logreg_problem
 
 N_NODES = 8
 P_FEAT, N_CLASSES = 784, 10
 DIM = P_FEAT * N_CLASSES
 LAM2 = 0.005
 
+#: the paper's compressor (eq. 21): 2-bit, block 256
+Q2_SPEC = api.CompressorSpec("qinf", {"bits": 2, "block": 256})
+ID_SPEC = api.CompressorSpec("identity")
 
-def flat_logreg(lam2=LAM2, **kw):
-    """FiniteSumProblem over flattened (p*C,) parameters."""
-    base = logreg_problem(lam2=lam2, n_nodes=N_NODES, n_per_node=150,
-                          n_batches=15, **kw)
 
-    def grad_flat(x, b):
-        return base.grad_batch(x.reshape(P_FEAT, N_CLASSES), b).reshape(-1)
-
-    def loss_flat(x, b):
-        return base.loss_batch(x.reshape(P_FEAT, N_CLASSES), b)
-
-    return oracles.FiniteSumProblem(grad_flat, base.data, base.n, base.m,
-                                    loss_flat)
+def flat_logreg(**kw):
+    """The paper's §5 problem over FLATTENED (p*C,) parameters — exactly the
+    registered ``problem='logreg'`` instance every spec below names, through
+    the same ``api.build_problem`` cache the spec-built runners hit, so the
+    reference solve and every figure cell share ONE dataset build."""
+    problem, _X0 = api.build_problem(
+        api.OracleSpec(name="full", problem="logreg", problem_params=kw),
+        N_NODES)
+    return problem
 
 
 def solve_reference(problem, lam1: float = 0.0, iters: int = 40000,
@@ -89,21 +94,111 @@ def _bits(compressor, oracle_name: str = "full") -> float:
 _GEVALS = {"full": 15.0, "sgd": 1.0, "lsvrg": 2.0 + 15.0 / 15.0, "saga": 1.0}
 
 
+# ---------------------------------------------------------------------------
+# Declarative figure cells
+# ---------------------------------------------------------------------------
+
+def paper_cell(algo: str, *, eta: float, steps: int, alpha: float = 0.5,
+               gamma: float = 1.0,
+               compressor: api.CompressorSpec = ID_SPEC,
+               oracle: str = "full", lam1: float = 0.0,
+               params: Optional[dict] = None, seed: int = 0,
+               name: str = "cell") -> api.ExperimentSpec:
+    """One figure row as an ExperimentSpec in the paper's §5 setting
+    (8-node ring, ``problem='logreg'``, dense engine)."""
+    return api.ExperimentSpec(
+        name=name, n_nodes=N_NODES, steps=steps, seed=seed,
+        algorithm=api.AlgorithmSpec(
+            algo, eta=api.constant(eta), alpha=api.constant(alpha),
+            gamma=api.constant(gamma), params=dict(params or {})),
+        compressor=compressor,
+        topology=api.TopologySpec(graph="ring"),
+        prox=(api.ProxSpec("l1", {"lam": lam1}) if lam1
+              else api.ProxSpec("none")),
+        oracle=api.OracleSpec(name=oracle, problem="logreg"),
+        execution=api.ExecutionSpec(engine="dense"))
+
+
+def _log_indices(num_steps: int, log_every: int) -> List[int]:
+    """The iterations ``run_alg`` has always logged: every ``log_every``-th
+    step plus the final one."""
+    idx = list(range(0, num_steps, log_every))
+    if not idx or idx[-1] != num_steps - 1:
+        idx.append(num_steps - 1)
+    return idx
+
+
+def run_cells(cells: Sequence[Tuple[str, api.ExperimentSpec]], xstar,
+              num_steps: int, *, log_every: int = 25, seeds: int = 1,
+              verbose: bool = False) -> List[RunResult]:
+    """Run figure cells through the one-jit sweep engine.
+
+    Cells sharing one structure (same algorithm/oracle/compressor family,
+    differing only in numeric axes) batch into a single trace; ``seeds > 1``
+    expands every cell over a seed axis inside the same trace and averages
+    its suboptimality curve across seeds."""
+    flat: List[api.ExperimentSpec] = []
+    owner: List[int] = []
+    for ci, (label, spec) in enumerate(cells):
+        spec = dataclasses.replace(spec, steps=num_steps,
+                                   name=label.replace(" ", "_"))
+        for s in range(seeds):
+            flat.append(spec if s == 0 else
+                        dataclasses.replace(spec, seed=spec.seed + s))
+            owner.append(ci)
+
+    Xs = jnp.broadcast_to(jnp.asarray(xstar),
+                          (N_NODES,) + np.shape(np.asarray(xstar)))
+
+    def metric(st):
+        return jnp.sum((st.X - Xs) ** 2)
+
+    idx = np.asarray(_log_indices(num_steps, log_every))
+    sub = [None] * len(flat)
+    wall = [0.0] * len(flat)
+    groups = sweep_mod.group_points(flat)
+    for g in groups:
+        runner = sweep_mod.runner_for_points([flat[i] for i in g])
+        _final, res = runner.run(metric_fn=metric)
+        for j, i in enumerate(g):
+            sub[i] = res.metrics["metric"][j, idx]
+            wall[i] = res.wall_s / len(g)
+
+    results = []
+    for ci, (label, spec) in enumerate(cells):
+        mine = [i for i in range(len(flat)) if owner[i] == ci]
+        curve = np.stack([sub[i] for i in mine]).mean(0)
+        comp = spec.compressor.build()
+        r = RunResult(label, [float(x) for x in curve], num_steps,
+                      _bits(comp, spec.oracle.name),
+                      _GEVALS.get(spec.oracle.name, 1.0),
+                      sum(wall[i] for i in mine))
+        results.append(r)
+        if verbose:
+            print(f"  {label:28s} final subopt {r.subopt[-1]:.3e}  "
+                  f"({r.wall_s:.1f}s)")
+    if verbose:
+        print(f"  [{len(groups)} one-jit groups for {len(flat)} grid "
+              f"points]")
+    return results
+
+
 def run_alg(name: str, alg, X0, xstar, num_steps: int, log_every: int = 25,
             seed: int = 0, compressor=None, oracle_name: str = "full",
             verbose: bool = False) -> RunResult:
+    """Drive an already-constructed dense algorithm through the shared
+    ``repro.api`` Runner loop (the pre-spec hand-rolled loop is gone) and
+    record the ``run_cells`` suboptimality series."""
     Xs = jnp.broadcast_to(jnp.asarray(xstar), X0.shape)
-    key = jax.random.key(seed)
-    k0, key = jax.random.split(key)
-    state = alg.init(X0, k0)
-    step = jax.jit(alg.step)
-    sub = []
+    runner = api.runner_for(alg, X0)
     t0 = time.time()
-    for t in range(num_steps):
-        key, sk = jax.random.split(key)
-        state = step(state, sk)
-        if t % log_every == 0 or t == num_steps - 1:
-            sub.append(float(jnp.sum((state.X - Xs) ** 2)))
+    state, logs = runner.run(
+        num_steps=num_steps, key=seed,
+        callback=lambda st, t: float(jnp.sum((st.X - Xs) ** 2)),
+        log_every=log_every)
+    sub = list(logs)
+    if not sub or (num_steps - 1) % log_every != 0:
+        sub.append(float(jnp.sum((state.X - Xs) ** 2)))
     wall = time.time() - t0
     if verbose:
         print(f"  {name:28s} final subopt {sub[-1]:.3e}  ({wall:.1f}s)")

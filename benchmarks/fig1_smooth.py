@@ -5,70 +5,60 @@ LEAD(32bit) / LEAD(2bit) converge linearly; LEAD(2bit) matches LEAD(32bit)
 per iteration at ~14x fewer bits.
 (c/d) stochastic: LEAD-{SGD,LSVRG,SAGA} 2bit match their 32bit twins; the
 VR variants converge linearly to the exact solution.
+
+Every row is a declarative ``cm.paper_cell`` ExperimentSpec executed
+through the one-jit sweep engine (``cm.run_cells``) — no hand-built
+algorithm objects; ``seeds > 1`` sweeps each row over a seed axis inside
+the same trace and averages the curves.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from benchmarks import common as cm
-from repro.core import baselines as B
-from repro.core import compression as C
-from repro.core import oracles, prox_lead
 
 
-def run(num_steps: int = 800, verbose: bool = False):
+def cells(num_steps: int, eta: float, eta_s: float):
+    """The Fig.-1 grid as (label, spec) rows.  ``eta`` = 1/(2L) for full
+    gradients, ``eta_s`` = 1/(6L) for the stochastic oracles (paper §5)."""
+    out = [
+        ("DGD", cm.paper_cell("dgd", eta=eta, steps=num_steps)),
+        ("NIDS (32bit)",
+         cm.paper_cell("nids_independent", eta=eta, steps=num_steps)),
+        ("Choco (2bit)",
+         cm.paper_cell("choco", eta=eta, steps=num_steps,
+                       compressor=cm.Q2_SPEC, params={"gamma_c": 0.2})),
+        ("LessBit (2bit)",
+         cm.paper_cell("lessbit", eta=eta, steps=num_steps, alpha=0.5,
+                       compressor=cm.Q2_SPEC, params={"theta": 0.2})),
+        ("LEAD (32bit)",
+         cm.paper_cell("lead", eta=eta, steps=num_steps, gamma=1.0)),
+        ("LEAD (2bit)",
+         cm.paper_cell("lead", eta=eta, steps=num_steps, gamma=0.5,
+                       compressor=cm.Q2_SPEC)),
+    ]
+    for orc in ("sgd", "lsvrg", "saga"):
+        tag = orc.upper()
+        out.append((f"LEAD-{tag} (32bit)",
+                    cm.paper_cell("lead", eta=eta_s, steps=num_steps,
+                                  gamma=1.0, oracle=orc)))
+        out.append((f"LEAD-{tag} (2bit)",
+                    cm.paper_cell("lead", eta=eta_s, steps=num_steps,
+                                  gamma=0.5, compressor=cm.Q2_SPEC,
+                                  oracle=orc)))
+    out.append(("LessBit-LSVRG (2bit)",
+                cm.paper_cell("lessbit", eta=eta_s, steps=num_steps,
+                              alpha=0.5, compressor=cm.Q2_SPEC,
+                              oracle="lsvrg", params={"theta": 0.2})))
+    return out
+
+
+def run(num_steps: int = 800, verbose: bool = False, seeds: int = 1):
     problem = cm.flat_logreg()
     xstar = cm.solve_reference(problem, lam1=0.0)
     L = cm.estimate_L(problem)
     eta = 1.0 / (2 * L)
-    mixer = cm.make_mixer()
-    X0 = jnp.zeros((cm.N_NODES, cm.DIM))
-    q = cm.q2()
-    results = []
-
-    def lead(compressor, oracle_name, steps=num_steps, tag=""):
-        orc = oracles.make_oracle(oracle_name, problem)
-        e = eta if oracle_name in ("full",) else 1.0 / (6 * L)
-        alg = prox_lead.lead(e, 0.5, 1.0 if isinstance(compressor, C.Identity)
-                             else 0.5, compressor, mixer, orc)
-        nm = f"LEAD{tag} ({'32bit' if isinstance(compressor, C.Identity) else '2bit'})"
-        return cm.run_alg(nm, alg, X0, xstar, steps, compressor=compressor,
-                          oracle_name=oracle_name, verbose=verbose)
-
-    # --- full gradient (Fig 1a/1b) -----------------------------------------
-    results.append(cm.run_alg(
-        "DGD", B.ProxDGD(eta=eta, mixer=mixer,
-                         oracle=oracles.FullGradient(problem)),
-        X0, xstar, num_steps, verbose=verbose))
-    results.append(cm.run_alg(
-        "NIDS (32bit)", B.NIDSIndependent(eta=eta, mixer=mixer,
-                                          oracle=oracles.FullGradient(problem)),
-        X0, xstar, num_steps, verbose=verbose))
-    results.append(cm.run_alg(
-        "Choco (2bit)", B.ChocoSGD(eta=eta, mixer=mixer,
-                                   oracle=oracles.FullGradient(problem),
-                                   compressor=q, gamma_c=0.2),
-        X0, xstar, num_steps, compressor=q, verbose=verbose))
-    results.append(cm.run_alg(
-        "LessBit (2bit)", B.LessBit(eta=eta, mixer=mixer,
-                                    oracle=oracles.FullGradient(problem),
-                                    compressor=q, theta=0.2, alpha=0.5),
-        X0, xstar, num_steps, compressor=q, verbose=verbose))
-    results.append(lead(C.Identity(), "full"))
-    results.append(lead(q, "full"))
-
-    # --- stochastic (Fig 1c/1d) --------------------------------------------
-    for orc in ("sgd", "lsvrg", "saga"):
-        results.append(lead(C.Identity(), orc, tag="-" + orc.upper()))
-        results.append(lead(q, orc, tag="-" + orc.upper()))
-    results.append(cm.run_alg(
-        "LessBit-LSVRG (2bit)",
-        B.LessBit(eta=1.0 / (6 * L), mixer=mixer,
-                  oracle=oracles.LSVRG(problem), compressor=q,
-                  theta=0.2, alpha=0.5),
-        X0, xstar, num_steps, compressor=q, oracle_name="lsvrg",
-        verbose=verbose))
-    return [r.row() for r in results]
+    rows = cm.run_cells(cells(num_steps, eta, 1.0 / (6 * L)), xstar,
+                        num_steps, seeds=seeds, verbose=verbose)
+    return [r.row() for r in rows]
 
 
 def _tail_ratio(r):

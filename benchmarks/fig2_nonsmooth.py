@@ -3,63 +3,54 @@
 Prox-LEAD (2bit) matches Prox-LEAD (32bit) and the uncompressed composite
 baselines (NIDS, PG-EXTRA/P2D2) per iteration, at ~14x fewer bits; the VR
 variants stay linear with compression + prox.
+
+Rows are declarative ``cm.paper_cell`` ExperimentSpecs executed through the
+one-jit sweep engine (``cm.run_cells``), like fig1_smooth.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from benchmarks import common as cm
-from repro.core import baselines as B
-from repro.core import compression as C
-from repro.core import oracles, prox_lead
-from repro.core import prox as proxmod
 
 LAM1 = 0.005
 
 
-def run(num_steps: int = 800, verbose: bool = False):
+def cells(num_steps: int, eta: float, eta_s: float):
+    out = [
+        ("Prox-DGD",
+         cm.paper_cell("dgd", eta=eta, steps=num_steps, lam1=LAM1)),
+        ("NIDS (32bit)",
+         cm.paper_cell("nids_independent", eta=eta, steps=num_steps,
+                       lam1=LAM1)),
+        ("PG-EXTRA/P2D2 (32bit)",
+         cm.paper_cell("pg_extra", eta=eta / 2, steps=num_steps,
+                       lam1=LAM1)),
+        ("Prox-LEAD (32bit)",
+         cm.paper_cell("prox_lead", eta=eta, steps=num_steps, gamma=1.0,
+                       lam1=LAM1)),
+        ("Prox-LEAD (2bit)",
+         cm.paper_cell("prox_lead", eta=eta, steps=num_steps, gamma=0.5,
+                       compressor=cm.Q2_SPEC, lam1=LAM1)),
+    ]
+    for orc in ("sgd", "lsvrg", "saga"):
+        tag = orc.upper()
+        out.append((f"Prox-LEAD-{tag} (32bit)",
+                    cm.paper_cell("prox_lead", eta=eta_s, steps=num_steps,
+                                  gamma=1.0, oracle=orc, lam1=LAM1)))
+        out.append((f"Prox-LEAD-{tag} (2bit)",
+                    cm.paper_cell("prox_lead", eta=eta_s, steps=num_steps,
+                                  gamma=0.5, compressor=cm.Q2_SPEC,
+                                  oracle=orc, lam1=LAM1)))
+    return out
+
+
+def run(num_steps: int = 800, verbose: bool = False, seeds: int = 1):
     problem = cm.flat_logreg()
     xstar = cm.solve_reference(problem, lam1=LAM1)
     L = cm.estimate_L(problem)
     eta = 1.0 / (2 * L)
-    mixer = cm.make_mixer()
-    prox = proxmod.L1(lam=LAM1)
-    X0 = jnp.zeros((cm.N_NODES, cm.DIM))
-    q = cm.q2()
-    results = []
-
-    def plead(compressor, oracle_name, tag=""):
-        orc = oracles.make_oracle(oracle_name, problem)
-        e = eta if oracle_name == "full" else 1.0 / (6 * L)
-        alg = prox_lead.ProxLEAD(
-            e, 0.5, 1.0 if isinstance(compressor, C.Identity) else 0.5,
-            compressor, prox, mixer, orc)
-        nm = (f"Prox-LEAD{tag} "
-              f"({'32bit' if isinstance(compressor, C.Identity) else '2bit'})")
-        return cm.run_alg(nm, alg, X0, xstar, num_steps,
-                          compressor=compressor, oracle_name=oracle_name,
-                          verbose=verbose)
-
-    results.append(cm.run_alg(
-        "Prox-DGD", B.ProxDGD(eta=eta, mixer=mixer, prox=prox,
-                              oracle=oracles.FullGradient(problem)),
-        X0, xstar, num_steps, verbose=verbose))
-    results.append(cm.run_alg(
-        "NIDS (32bit)",
-        B.NIDSIndependent(eta=eta, mixer=mixer, prox=prox,
-                          oracle=oracles.FullGradient(problem)),
-        X0, xstar, num_steps, verbose=verbose))
-    results.append(cm.run_alg(
-        "PG-EXTRA/P2D2 (32bit)",
-        B.PGExtra(eta=eta / 2, mixer=mixer, prox=prox,
-                  oracle=oracles.FullGradient(problem)),
-        X0, xstar, num_steps, verbose=verbose))
-    results.append(plead(C.Identity(), "full"))
-    results.append(plead(q, "full"))
-    for orc in ("sgd", "lsvrg", "saga"):
-        results.append(plead(C.Identity(), orc, tag="-" + orc.upper()))
-        results.append(plead(q, orc, tag="-" + orc.upper()))
-    return [r.row() for r in results]
+    rows = cm.run_cells(cells(num_steps, eta, 1.0 / (6 * L)), xstar,
+                        num_steps, seeds=seeds, verbose=verbose)
+    return [r.row() for r in rows]
 
 
 def validate(rows):

@@ -28,32 +28,37 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="reduced iteration counts (CI)")
     ap.add_argument("--smoke", action="store_true",
-                    help="make-ci gate: tiny comm+netsim+wire sweep, writes "
-                         "BENCH_comm.json / BENCH_netsim.json / "
-                         "BENCH_wire.json at repo root so the bench "
-                         "trajectory accumulates per PR")
+                    help="make-ci gate: tiny comm+netsim+wire+sweep runs, "
+                         "writes BENCH_comm.json / BENCH_netsim.json / "
+                         "BENCH_wire.json / BENCH_sweep.json at repo root "
+                         "so the bench trajectory accumulates per PR")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,table3,kernels,"
-                         "comm,ablations,netsim,wire")
+                         "comm,ablations,netsim,wire,sweep")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="seed-axis width for the fig1/fig2 grids (swept "
+                         "inside the one-jit groups, curves averaged)")
     ap.add_argument("--json-out", default="experiments/bench_results.json")
     args = ap.parse_args(argv)
     if args.smoke and args.only is None:
-        args.only = "comm,netsim,wire"
+        args.only = "comm,netsim,wire,sweep"
     if args.steps is not None:
         steps = args.steps
     else:
         steps = 60 if args.smoke else 200 if args.quick else 800
 
     from benchmarks import (ablations, bench_comm, bench_kernels,
-                            bench_netsim, bench_wire, fig1_smooth,
-                            fig2_nonsmooth, table3_complexity)
+                            bench_netsim, bench_sweep, bench_wire,
+                            fig1_smooth, fig2_nonsmooth, table3_complexity)
 
     suites = {
         "fig1": ("Fig.1 smooth logistic regression",
-                 lambda: fig1_smooth.run(steps, verbose=True),
+                 lambda: fig1_smooth.run(steps, verbose=True,
+                                         seeds=args.seeds),
                  fig1_smooth.validate),
         "fig2": ("Fig.2 non-smooth logistic regression",
-                 lambda: fig2_nonsmooth.run(steps, verbose=True),
+                 lambda: fig2_nonsmooth.run(steps, verbose=True,
+                                            seeds=args.seeds),
                  fig2_nonsmooth.validate),
         "table3": ("Table 2/3 rate-vs-theory",
                    lambda: table3_complexity.run(verbose=True),
@@ -73,6 +78,9 @@ def main(argv=None):
         "wire": ("Wire path: bucketed vs per-leaf gossip (8-dev subprocess)",
                  lambda: bench_wire.run(steps=min(20, steps), verbose=True),
                  bench_wire.validate),
+        "sweep": ("Sweep engine: one-jit 16-point grid vs serial loop",
+                  lambda: bench_sweep.run(min(60, steps), verbose=True),
+                  bench_sweep.validate),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
 
@@ -111,7 +119,7 @@ def main(argv=None):
     print("results written to", out)
     if args.smoke:
         # per-suite trajectory files at the repo root (one per PR gate)
-        for key in ("netsim", "comm", "wire"):
+        for key in ("netsim", "comm", "wire", "sweep"):
             if key not in all_rows:
                 continue
             p = pathlib.Path(f"BENCH_{key}.json")

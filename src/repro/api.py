@@ -27,6 +27,13 @@ builds that grid through:
     wire).  Checkpoints written through the runner embed the originating
     spec, so ``load_checkpoint`` rebuilds the exact experiment.
 
+* :class:`SweepSpec` — a declarative experiment *grid*: one base
+  ExperimentSpec plus :class:`AxisSpec` axes (``seed``, the constant/
+  harmonic schedule fields, ``compressor.bits``, ...).  ``build(sweep)``
+  resolves it to a ``repro.sweep.SweepRunner`` that executes the whole
+  grid as ONE jitted computation, every point bit-for-bit equal to its
+  serial ``build(point).run`` (see ``docs/ARCHITECTURE.md``).
+
 Every component is resolved through ``repro.registry`` name->factory tables,
 so a new compressor/topology/algorithm registered with
 ``@register_compressor`` etc. is immediately reachable from specs, CLIs, and
@@ -341,7 +348,17 @@ _NESTED = {"algorithm": AlgorithmSpec, "compressor": CompressorSpec,
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The full declarative experiment: algorithm x compressor x topology x
-    faults x objective x execution.  Frozen and JSON-round-trippable."""
+    faults x objective x execution.  Frozen and JSON-round-trippable
+    (``spec == ExperimentSpec.from_json(spec.to_json())`` always holds).
+
+    Fields: ``name`` (label only), ``n_nodes``, ``steps``, ``seed`` (run
+    PRNG chain), ``fault_seed`` (netsim fault draws), nested
+    :class:`AlgorithmSpec` / :class:`CompressorSpec` / :class:`TopologySpec`
+    / ``faults`` (tuple of :class:`FaultSpec`) / :class:`ProxSpec` /
+    :class:`OracleSpec` (dense+netsim objective) or :class:`ModelSpec`
+    (sharded NN objective) / :class:`ExecutionSpec` (engine + wire knobs).
+    Resolve with :func:`build`; compare with :meth:`diff`; persist with
+    :meth:`save` / :meth:`load`."""
     name: str = "experiment"
     n_nodes: int = 8
     steps: int = 200
@@ -426,6 +443,165 @@ class ExperimentSpec:
 
 
 _MISSING = object()
+
+
+# ===========================================================================
+# SweepSpec: a grid of ExperimentSpecs as one declarative object
+# ===========================================================================
+
+#: axis paths a SweepSpec understands (the same table repro.sweep enforces)
+SWEEP_AXIS_PATHS = (
+    "seed", "fault_seed",
+    "algorithm.eta[.value|.t0]", "algorithm.alpha[.value|.t0]",
+    "algorithm.gamma[.value|.t0]",
+    "algorithm.params.<field>", "compressor.bits",
+)
+
+_AXIS_SCHED = {"algorithm.eta": ("eta", "value"),
+               "algorithm.eta.value": ("eta", "value"),
+               "algorithm.eta.t0": ("eta", "t0"),
+               "algorithm.alpha": ("alpha", "value"),
+               "algorithm.alpha.value": ("alpha", "value"),
+               "algorithm.alpha.t0": ("alpha", "t0"),
+               "algorithm.gamma": ("gamma", "value"),
+               "algorithm.gamma.value": ("gamma", "value"),
+               "algorithm.gamma.t0": ("gamma", "t0")}
+
+
+def set_axis_value(spec: "ExperimentSpec", path: str,
+                   value) -> "ExperimentSpec":
+    """``spec`` with the sweep-axis ``path`` set to ``value`` — the single
+    place axis paths are interpreted, shared by ``SweepSpec.points()`` and
+    the ``--axis`` CLI.  Unknown paths raise listing the supported axes."""
+    if path == "seed":
+        return dataclasses.replace(spec, seed=int(value))
+    if path == "fault_seed":
+        return dataclasses.replace(spec, fault_seed=int(value))
+    if path in _AXIS_SCHED:
+        field, attr = _AXIS_SCHED[path]
+        sched = dataclasses.replace(getattr(spec.algorithm, field),
+                                    **{attr: float(value)})
+        algorithm = dataclasses.replace(spec.algorithm, **{field: sched})
+        return dataclasses.replace(spec, algorithm=algorithm)
+    if path.startswith("algorithm.params."):
+        name = path[len("algorithm.params."):]
+        params = dict(spec.algorithm.params)
+        params[name] = value
+        algorithm = dataclasses.replace(spec.algorithm, params=params)
+        return dataclasses.replace(spec, algorithm=algorithm)
+    if path in ("compressor.bits", "compressor.params.bits"):
+        params = dict(spec.compressor.params)
+        params["bits"] = int(value)
+        return dataclasses.replace(
+            spec, compressor=dataclasses.replace(spec.compressor,
+                                                 params=params))
+    raise ValueError(f"unknown sweep axis {path!r}; supported axes: "
+                     f"{SWEEP_AXIS_PATHS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSpec:
+    """One sweep axis: a supported ``path`` (see :data:`SWEEP_AXIS_PATHS`)
+    and the numeric values it takes."""
+    path: str
+    values: Tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "values", tuple(self.values))
+        if not self.values:
+            raise ValueError(f"axis {self.path!r} needs at least one value")
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "AxisSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A declarative experiment grid: one ``base`` :class:`ExperimentSpec`
+    plus :class:`AxisSpec` axes whose cartesian product (later axes fastest)
+    expands to the per-point specs.  Frozen and JSON-round-trippable like
+    ExperimentSpec; ``build(sweep_spec)`` resolves it to a
+    ``repro.sweep.SweepRunner`` that executes the whole grid as ONE jitted,
+    vmapped computation — every point bit-for-bit equal to its serial
+    ``build(point).run`` (tests/test_sweep.py)."""
+    name: str = "sweep"
+    base: "ExperimentSpec" = dataclasses.field(
+        default_factory=lambda: ExperimentSpec())
+    axes: Tuple[AxisSpec, ...] = ()
+
+    def __post_init__(self):
+        if isinstance(self.base, Mapping):
+            object.__setattr__(self, "base",
+                               ExperimentSpec.from_dict(self.base))
+        axes = tuple(AxisSpec.from_dict(a) if isinstance(a, Mapping) else a
+                     for a in self.axes)
+        object.__setattr__(self, "axes", axes)
+
+    @property
+    def n_points(self) -> int:
+        n = 1
+        for a in self.axes:
+            n *= len(a.values)
+        return n
+
+    def points(self) -> Tuple["ExperimentSpec", ...]:
+        """Expand the grid: cartesian product of the axes over ``base``,
+        later axes varying fastest; each point is named
+        ``<base.name>@path=value,...``."""
+        import itertools
+        out = []
+        for combo in itertools.product(*(a.values for a in self.axes)):
+            p = self.base
+            tags = []
+            for a, v in zip(self.axes, combo):
+                p = set_axis_value(p, a.path, v)
+                tags.append(f"{a.path}={v:g}" if isinstance(v, float)
+                            else f"{a.path}={v}")
+            if tags:
+                p = dataclasses.replace(p, name=f"{self.base.name}@"
+                                        + ",".join(tags))
+            out.append(p)
+        return tuple(out)
+
+    # --- serialization (same conventions as ExperimentSpec) ---------------
+    def to_dict(self) -> dict:
+        return _to_jsonable(self)
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "SweepSpec":
+        return cls(**dict(d))
+
+    @classmethod
+    def from_json(cls, text: str) -> "SweepSpec":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.write_text(self.to_json() + "\n")
+        return p
+
+    @classmethod
+    def load(cls, path) -> "SweepSpec":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+def parse_axis(arg: str) -> AxisSpec:
+    """CLI axis shorthand ``path=v1,v2,...`` or ``path=lo:hi[:step]``
+    (integer range, half-open like Python's) -> AxisSpec.  Examples:
+    ``seed=0:16``, ``compressor.bits=2,4,8``, ``algorithm.eta=0.05,0.1``."""
+    path, sep, rhs = arg.partition("=")
+    if not sep or not rhs:
+        raise ValueError(f"--axis wants path=values, got {arg!r}")
+    if ":" in rhs:
+        parts = [int(x) for x in rhs.split(":")]
+        if len(parts) not in (2, 3):
+            raise ValueError(f"range axis wants lo:hi[:step], got {rhs!r}")
+        return AxisSpec(path, tuple(range(*parts)))
+    return AxisSpec(path, tuple(_cast_scalar(v) for v in rhs.split(",")))
 
 
 # ===========================================================================
@@ -789,9 +965,32 @@ def default_oracle_spec(spec: ExperimentSpec) -> OracleSpec:
                       if spec.execution.engine == "netsim" else "logreg")
 
 
+# (problem name, factory identity, params json, n_nodes) -> (problem, X0).
+# Problem factories are deterministic in their params and FiniteSumProblem
+# is frozen, so sharing one instance across runners is safe — and a grouped
+# figure sweep (benchmarks/common.run_cells) builds dozens of runners over
+# ONE dataset; without the cache each re-generated it.  The factory object
+# sits in the key so re-registering a name (tests shadow components) misses.
+_PROBLEM_CACHE: Dict[Any, Any] = {}
+_PROBLEM_CACHE_MAX = 8
+
+
+def build_problem(osp: "OracleSpec", n_nodes: int):
+    """(FiniteSumProblem, X0) for an OracleSpec, built once per distinct
+    (problem, params, n_nodes) and shared thereafter."""
+    key = (osp.problem, registry.get("problem", osp.problem),
+           json.dumps(_to_jsonable(osp.problem_params), sort_keys=True),
+           n_nodes)
+    if key not in _PROBLEM_CACHE:
+        if len(_PROBLEM_CACHE) >= _PROBLEM_CACHE_MAX:
+            _PROBLEM_CACHE.pop(next(iter(_PROBLEM_CACHE)))
+        _PROBLEM_CACHE[key] = osp.build_problem(n_nodes)
+    return _PROBLEM_CACHE[key]
+
+
 def _oracle_and_problem(spec: ExperimentSpec):
     osp = default_oracle_spec(spec)
-    problem, X0 = osp.build_problem(spec.n_nodes)
+    problem, X0 = build_problem(osp, spec.n_nodes)
     return osp.build(problem), problem, X0
 
 
@@ -916,8 +1115,15 @@ def _build_sharded(spec: ExperimentSpec, mesh=None) -> TrainerRunner:
     return build_trainer_runner(spec, mesh=mesh)
 
 
-def build(spec: ExperimentSpec, *, mesh=None) -> Runner:
-    """Resolve an ExperimentSpec into a Runner via the engine registry."""
+def build(spec, *, mesh=None) -> Runner:
+    """Resolve a spec into a Runner via the engine registry.
+
+    ``ExperimentSpec`` -> its ``execution.engine`` (dense | netsim |
+    sharded); ``SweepSpec`` -> the one-jit vmapped grid engine
+    (``repro.sweep.SweepRunner``)."""
+    if isinstance(spec, SweepSpec):
+        from repro import sweep as _sweep           # noqa: F401 (registers)
+        return registry.make("engine", "sweep", spec=spec, mesh=mesh)
     return registry.make("engine", spec.execution.engine, spec=spec,
                          mesh=mesh)
 
@@ -960,14 +1166,20 @@ def load_checkpoint(path, step: Optional[int] = None, *, mesh=None):
 # Golden-spec gate (make ci)
 # ===========================================================================
 
-def check_spec_file(path) -> ExperimentSpec:
-    """Round-trip + build one golden spec file; raises on any failure."""
+def check_spec_file(path):
+    """Round-trip + build one golden spec file; raises on any failure.
+
+    Handles both spec kinds: a JSON object with a ``base`` key is a
+    :class:`SweepSpec` (its build also validates the axis plan), anything
+    else an :class:`ExperimentSpec`."""
     text = pathlib.Path(path).read_text()
-    spec = ExperimentSpec.from_json(text)
-    again = ExperimentSpec.from_json(spec.to_json())
+    cls = SweepSpec if "base" in json.loads(text) else ExperimentSpec
+    spec = cls.from_json(text)
+    again = cls.from_json(spec.to_json())
     if spec != again:
+        detail = spec.diff(again) if cls is ExperimentSpec else ""
         raise ValueError(f"{path}: spec does not round-trip through JSON; "
-                         f"diff: {spec.diff(again)}")
+                         f"diff: {detail}")
     build(spec)
     return spec
 
@@ -996,10 +1208,16 @@ def _main(argv=None) -> int:
             return 1
         for f in files:
             spec = check_spec_file(f)
-            print(f"[spec-check] OK {f.name}: {spec.name} "
-                  f"(engine={spec.execution.engine}, "
-                  f"algo={spec.algorithm.name}, "
-                  f"compressor={spec.compressor.name})")
+            if isinstance(spec, SweepSpec):
+                print(f"[spec-check] OK {f.name}: {spec.name} "
+                      f"(sweep of {spec.n_points} points over "
+                      f"{[a.path for a in spec.axes]}, "
+                      f"engine={spec.base.execution.engine})")
+            else:
+                print(f"[spec-check] OK {f.name}: {spec.name} "
+                      f"(engine={spec.execution.engine}, "
+                      f"algo={spec.algorithm.name}, "
+                      f"compressor={spec.compressor.name})")
         print(f"[spec-check] {len(files)} golden specs round-trip and build")
         return 0
     ap.print_help()

@@ -53,6 +53,11 @@ class Baseline:
     # NOTE: there is deliberately no per-class run loop — every algorithm
     # (all six baselines and ProxLEAD alike) drives through the one shared
     # ``Runner.run`` in repro.api.
+    #
+    # Contract (relied on by repro.sweep): init/step are pure functions of
+    # (state, key) with static shapes and no Python-side state, and scalar
+    # fields (eta, theta, gamma_c, ...) accept traced values — a whole
+    # hyperparameter grid then runs inside one trace.
 
 
 @dataclasses.dataclass

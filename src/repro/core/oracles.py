@@ -5,6 +5,14 @@ problem supplies ``grad_batch(x_i, batch_ij) -> grad`` and the stacked data
 with leading dims (n, m, ...).  Oracles are vmapped over nodes and carry
 their reference-point state explicitly (pure functions, jit/scan friendly).
 
+Batch-axis clean by construction (the contract ``repro.sweep`` relies on
+to run a grid of experiments inside one trace): every ``sample`` is a pure
+function of (X, state, key), all shapes are static (batch indices select,
+they never resize), and ``OracleState`` holds only arrays.  LSVRG's
+reference refresh is a ``lax.cond``, which lowers to a select when the
+grid axis is batched — both branches compute, the selected value is the
+serial one bit-for-bit.
+
 Uniform sampling p_ij = 1/m throughout (paper's experimental setting), so
 
   LSVRG:  g_i = grad f_il(x_i) - grad f_il(xt_i) + grad f_i(xt_i),

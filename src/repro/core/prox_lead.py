@@ -37,7 +37,10 @@ class ProxLEADState(NamedTuple):
 @dataclasses.dataclass
 class ProxLEAD:
     """Algorithm 1.  ``eta``/``alpha``/``gamma`` may be floats or callables
-    k -> float for the diminishing-stepsize schedule of Theorem 7."""
+    k -> float for the diminishing-stepsize schedule of Theorem 7 — or
+    traced scalars: ``init``/``step`` are pure functions of (state, key)
+    with static shapes, so ``repro.sweep`` rebinds these fields (and the
+    compressor) per grid point inside one shared trace."""
     eta: Any
     alpha: Any
     gamma: Any

@@ -123,6 +123,43 @@ def _support_stack(schedule: TopologySchedule) -> jnp.ndarray:
     return jnp.asarray(supp * (1.0 - eye))
 
 
+def make_scan_body(algo, mixer: SimMixer, schedule: TopologySchedule, *,
+                   objective_fn: Optional[Callable] = None,
+                   bits_per_edge=0):
+    """The per-iteration scan body of :func:`simulate`: one algorithm step
+    plus the metrics record (consensus, objective gap, exact bits on wire).
+
+    Factored out so the sweep engine (``repro.sweep``) can run the *same*
+    trajectory computation vmapped over a grid of per-point operands —
+    ``bits_per_edge`` may then be a traced per-point scalar instead of the
+    host int :func:`simulate` closes over.  ``algo`` must already carry
+    ``mixer``."""
+    supp = _support_stack(schedule)
+    T = schedule.T_cycle
+    comm_style = isinstance(algo, ProxLEAD)
+
+    def body(state, key):
+        k = state.k                       # round index the step will use
+        new = algo.step(state, key)
+        alive = supp[jnp.asarray(k, jnp.int32) % T]
+        emask = mixer.edge_mask_at(k, comm=comm_style)
+        if emask is not None:
+            alive = alive * emask
+        if comm_style:
+            send = mixer.send_mask(k)
+            if send is not None:
+                alive = alive * send[None, :]      # sender is the column
+        rec = {
+            "consensus": metrics_mod.consensus_error(new.X),
+            "objective": (objective_fn(new.X) if objective_fn is not None
+                          else jnp.float32(0.0)),
+            "bits": jnp.sum(alive) * bits_per_edge,
+        }
+        return new, rec
+
+    return body
+
+
 def simulate(algo, schedule: TopologySchedule,
              faults: Sequence[faults_mod.FaultModel] = (), *,
              X0, steps: int, seed: int = 0, fault_seed: int = 0,
@@ -146,32 +183,13 @@ def simulate(algo, schedule: TopologySchedule,
 
     compressor = getattr(algo, "compressor", None)
     bits_per_edge = metrics_mod.payload_bits_per_node(compressor, X0)
-    supp = _support_stack(schedule)
     T = schedule.T_cycle
-    comm_style = isinstance(algo, ProxLEAD)
 
     keys = jax.random.split(jax.random.key(seed), steps + 1)
     state0 = algo.init(X0, keys[0])
 
-    def body(state, key):
-        k = state.k                       # round index the step will use
-        new = algo.step(state, key)
-        alive = supp[jnp.asarray(k, jnp.int32) % T]
-        emask = mixer.edge_mask_at(k, comm=comm_style)
-        if emask is not None:
-            alive = alive * emask
-        if comm_style:
-            send = mixer.send_mask(k)
-            if send is not None:
-                alive = alive * send[None, :]      # sender is the column
-        rec = {
-            "consensus": metrics_mod.consensus_error(new.X),
-            "objective": (objective_fn(new.X) if objective_fn is not None
-                          else jnp.float32(0.0)),
-            "bits": jnp.sum(alive) * bits_per_edge,
-        }
-        return new, rec
-
+    body = make_scan_body(algo, mixer, schedule, objective_fn=objective_fn,
+                          bits_per_edge=bits_per_edge)
     final, recs = jax.jit(
         lambda s, ks: jax.lax.scan(body, s, ks))(state0, keys[1:])
 

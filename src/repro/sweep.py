@@ -1,0 +1,627 @@
+"""One-jit grid execution for paper-figure sweeps.
+
+The paper's headline artifacts are *grids* — algorithm x compressor
+precision x oracle x seed (Fig. 1/2, Table 3, the netsim robustness table).
+Executed naively, every grid point is its own Python loop around its own
+``jax.jit``, so a 16-point grid pays 16 traces, 16 compiles, and
+``16 x steps`` host dispatches.  This module compiles an entire grid into
+ONE jitted computation:
+
+    base  = ExperimentSpec(...)                      # any dense/netsim spec
+    spec  = SweepSpec(base=base, axes=(
+                AxisSpec("seed", (0, 1, 2, 3)),
+                AxisSpec("compressor.bits", (2, 4)),
+            ))
+    runner = repro.api.build(spec)                   # -> SweepRunner
+    final, result = runner.run()                     # one trace, one dispatch
+
+``SweepRunner`` satisfies the ``repro.api.Runner`` protocol; its ``step``
+is ``vmap(point_step)`` over the stacked grid axis, and its ``run``
+executes every point's full ``lax.scan`` trajectory inside a single jitted
+function.
+
+Supported axes (grid = cartesian product, later axes fastest):
+
+==============================  =============================================
+path                            meaning
+==============================  =============================================
+``seed``                        per-point PRNG chain (oracle sampling /
+                                stochastic rounding); the *problem data* is
+                                shared — data seeds live in
+                                ``oracle.problem_params.seed``
+``fault_seed``                  netsim fault-draw chain
+``algorithm.eta`` (also
+``.value`` / ``.t0``; same for
+``alpha`` / ``gamma``)          the numeric fields of the existing
+                                constant/harmonic ``ScheduleSpec``
+``algorithm.params.<field>``    any scalar field of the algorithm dataclass
+                                (e.g. ``theta`` for lessbit, ``gamma_c`` for
+                                choco)
+``compressor.bits``             QInf bit-width — payload *shapes* are
+                                bit-width independent, so same-shape payloads
+                                batch across precisions
+==============================  =============================================
+
+Engines: ``dense`` first-class; ``netsim`` (``engine.simulate`` semantics —
+the materialized schedule stack is shared across points, so a ``seed`` axis
+combined with a seed-dependent schedule like ``random_matching`` /
+``markov_drop`` is rejected); ``sharded`` is explicitly rejected — the
+trainer owns one SPMD mesh per process, run those points as separate
+processes.
+
+Parity is the hard constraint (pinned by tests/test_sweep.py): every grid
+point of a sweep run is bit-for-bit equal to ``api.build(point).run(...)``
+for its expanded per-point spec.  Three ingredients make that hold:
+
+* each point's ``init`` runs eagerly on the host through its *serial*,
+  concrete-valued algorithm (the exact op-by-op computation the serial
+  runner performs — XLA fuses an init traced into a larger jit differently,
+  which already costs last-ulp equality);
+* the per-point trajectory replicates the serial runner's PRNG chain and
+  scan body exactly, and the grid maps over points with ``lax.map`` — the
+  point programs stay *unbatched*, so every dot/reduce lowers exactly like
+  its serial twin.  (A ``batch='vmap'`` mode batches the point axis instead
+  for accelerator throughput; XLA's batched backward-pass dots reassociate
+  reductions, so that mode is documented as last-ulp, not bit-exact, on
+  CPU.)
+* scalar axes bind as traced operands whose values reproduce the host
+  arithmetic exactly: f64 operands under ``jax_enable_x64`` (without x64,
+  compound expressions like ``gamma / (2 * eta)`` can differ in the last
+  ulp, and the engine warns); the ``compressor.bits`` axis swaps in
+  :class:`_TracedBitsQInf`, an op-exact twin of ``QInf`` whose level count
+  ``2^{b-1}`` is a traced f32 operand (exactly representable for every b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import registry
+from repro.core.compression import Compressor, QInf
+from repro.kernels import ops as kops
+from repro.netsim import engine as netsim_engine
+from repro.netsim import metrics as netsim_metrics
+
+tmap = jax.tree_util.tree_map
+
+
+# ===========================================================================
+# Traced-bits QInf twin
+# ===========================================================================
+
+class _TracedBitsQInf(Compressor):
+    """``QInf`` with the level count ``2^{b-1}`` as a traced operand.
+
+    Bit-for-bit twin of ``QInf.compress`` / ``QInf.decompress`` for every
+    bit-width: it replicates both dispatch branches (the 2D
+    last-dim==block tile path and the rank-generic
+    ``kops.qinf_quantize_lastdim`` path) op by op, drawing the stochastic
+    rounding noise with the same key on the same shape, keeping the same
+    f32 intermediates and the same int8 code round-trip.  ``levels`` is an
+    exact power of two in f32, so the traced arithmetic produces the same
+    values the static-``bits`` kernels produce.  The payload *shapes* are
+    bit-width independent, which is what lets one trace cover every
+    precision.
+    """
+
+    name = "qinf_traced_bits"
+
+    def __init__(self, levels, block: int, use_pallas: bool):
+        self.levels = levels                    # traced f32 scalar, 2^{b-1}
+        self.block = block
+        self.use_pallas = use_pallas
+
+    def _quantize(self, xb, u):
+        levels = self.levels
+        maxabs = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+        safe = jnp.where(maxabs > 0, maxabs, jnp.float32(1.0))
+        mag = jnp.minimum(jnp.floor(levels * jnp.abs(xb) / safe + u), levels)
+        codes = (jnp.sign(xb) * mag).astype(jnp.int8)
+        scales = (maxabs / levels).astype(jnp.float32)
+        return codes, scales
+
+    def compress(self, x, key):
+        assert key is not None, "QInf is stochastic: pass a PRNG key"
+        if self.use_pallas and x.ndim == 2 and x.shape[-1] == self.block:
+            # twin of the (R, block) tile branch: noise on the true rows,
+            # rows padded to the sublane tile, sliced back after
+            from repro.kernels import quantize as qk
+            R = x.shape[0]
+            Rp = -(-R // qk.ROWS_TILE) * qk.ROWS_TILE
+            u = jax.random.uniform(key, x.shape, jnp.float32)
+            pad = [(0, Rp - R), (0, 0)]
+            codes, scales = self._quantize(
+                jnp.pad(x.astype(jnp.float32), pad), jnp.pad(u, pad))
+            codes = codes[:R, None, :]
+            scales = scales[:R, None, :]
+        else:
+            # twin of kops.qinf_quantize_lastdim: block along the last axis
+            # (zero-padded), noise drawn on the blocked shape
+            xb = kops.blockwise_lastdim(x, block=self.block)
+            u = jax.random.uniform(key, xb.shape, jnp.float32)
+            codes, scales = self._quantize(xb, u)
+        return {"codes": codes, "scales": scales}
+
+    def decompress(self, payload, shape, dtype):
+        return kops.qinf_dequantize_lastdim(
+            payload["codes"], payload["scales"], shape, dtype,
+            block=self.block)
+
+
+# ===========================================================================
+# Operand plan: point specs -> stacked numeric operands + binders
+# ===========================================================================
+
+_SCHED_RE = re.compile(r"^algorithm\.(eta|alpha|gamma)(\.value|\.t0)?$")
+_PARAM_RE = re.compile(r"^algorithm\.params\.(\w+)$")
+
+SUPPORTED_AXES = (
+    "seed", "fault_seed",
+    "algorithm.{eta|alpha|gamma}[.value|.t0]",
+    "algorithm.params.<numeric field>",
+    "compressor.bits",
+)
+
+
+def _sdtype():
+    """Scalar-operand dtype: f64 under x64 (bit-exact vs the host-double
+    constants serial runs embed), f32 otherwise (last-ulp caveat)."""
+    return jnp.float64 if jax.config.x64_enabled else jnp.float32
+
+
+@dataclasses.dataclass
+class _Plan:
+    """How a batch of point specs maps onto traced operands.
+
+    ``operands``  name -> (P,) np array, the mapped leading axis (scalar
+                  hyperparameters and quantization levels; seeds are
+                  consumed host-side by the PRNG-chain setup instead).
+    ``sched``     algorithm field ("eta"/...) -> base ScheduleSpec, for the
+                  fields whose value/t0 vary.
+    ``params``    varying algorithm-dataclass field names.
+    ``bits``      True when compressor.bits varies.
+    ``varying``   every dotted path that differs across points.
+    """
+    operands: Dict[str, np.ndarray]
+    sched: Dict[str, Any]
+    params: Tuple[str, ...]
+    bits: bool
+    varying: frozenset
+
+
+def plan_points(points: Sequence) -> _Plan:
+    """Classify how ``points`` differ and stack the per-point operands.
+
+    Raises ``ValueError`` for any difference outside :data:`SUPPORTED_AXES`
+    — grid points must share everything but the numeric axis values
+    (one structure, one trace)."""
+    base = points[0]
+    varying = set()
+    for p in points[1:]:
+        varying |= set(base.diff(p))
+    varying.discard("name")                       # labels are free to differ
+
+    sd = _sdtype()
+    operands: Dict[str, np.ndarray] = {}
+    sched: Dict[str, Any] = {}
+    params: List[str] = []
+    bits = False
+    for path in sorted(varying):
+        if path in ("seed", "fault_seed"):
+            if path == "fault_seed" and base.execution.engine != "netsim":
+                raise ValueError("fault_seed axis: netsim engine only")
+        elif _SCHED_RE.match(path):
+            field = _SCHED_RE.match(path).group(1)
+            sched[field] = getattr(base.algorithm, field)
+        elif _PARAM_RE.match(path):
+            name = _PARAM_RE.match(path).group(1)
+            vals = [p.algorithm.params.get(name) for p in points]
+            if not all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                       for v in vals):
+                raise ValueError(
+                    f"axis {path!r}: only numeric algorithm params sweep, "
+                    f"set on EVERY point (got {vals!r})")
+            operands[f"param:{name}"] = np.asarray(vals, sd)
+            params.append(name)
+        elif path == "compressor.params.bits":
+            if base.compressor.name != "qinf":
+                raise ValueError(
+                    f"compressor.bits axis needs a 'qinf' base compressor "
+                    f"(got {base.compressor.name!r}: payload shapes must be "
+                    f"bit-width independent)")
+            bvals = [int(p.compressor.params.get("bits", 2)) for p in points]
+            if not all(1 <= b <= 8 for b in bvals):
+                raise ValueError(f"compressor.bits axis: bits must be in "
+                                 f"1..8, got {sorted(set(bvals))}")
+            # 2^{b-1} is exactly representable in f32 for every b
+            operands["levels"] = np.asarray(
+                [float(2 ** (b - 1)) for b in bvals], np.float32)
+            bits = True
+        else:
+            raise ValueError(
+                f"unsupported sweep axis {path!r}; grid points may differ "
+                f"only in {SUPPORTED_AXES}")
+
+    # schedule fields: stack value*t0 (host-double product, so the traced
+    # harmonic closure reproduces the serial `v * t0 / (k + t0)` exactly)
+    for field, base_sched in sched.items():
+        kinds = {getattr(p.algorithm, field).kind for p in points}
+        if len(kinds) > 1:
+            raise ValueError(f"axis algorithm.{field}: schedule *kind* must "
+                             f"not vary across points (got {sorted(kinds)})")
+        ss = [getattr(p.algorithm, field) for p in points]
+        if base_sched.kind == "constant":
+            operands[f"{field}:value"] = np.asarray(
+                [s.value for s in ss], sd)
+        elif base_sched.kind == "harmonic":
+            operands[f"{field}:vt0"] = np.asarray(
+                [s.value * s.t0 for s in ss], sd)
+            operands[f"{field}:t0"] = np.asarray([s.t0 for s in ss], sd)
+        else:
+            raise ValueError(f"axis algorithm.{field}: unknown schedule "
+                             f"kind {base_sched.kind!r}")
+
+    if not jax.config.x64_enabled and (sched or params):
+        warnings.warn(
+            "hyperparameter sweep axes without jax_enable_x64: compound "
+            "scalar expressions (e.g. gamma/(2*eta)) may differ from the "
+            "serial run in the last ulp; enable x64 for bit-exact parity",
+            stacklevel=3)
+    return _Plan(operands, sched, tuple(params), bits, frozenset(varying))
+
+
+# ===========================================================================
+# SweepRunner
+# ===========================================================================
+
+class SweepResult:
+    """Host-side record of one sweep execution.
+
+    ``metrics``  name -> (P, steps) float64 array — for netsim sweeps the
+    ``consensus`` / ``objective`` / ``bits`` trajectories, for dense sweeps
+    the optional ``metric_fn`` trace.
+    """
+
+    def __init__(self, names: Sequence[str], metrics: Dict[str, np.ndarray],
+                 wall_s: float, traces: int, meta: Optional[dict] = None):
+        self.names = list(names)
+        self.metrics = metrics
+        self.wall_s = wall_s
+        self.traces = traces
+        self.meta = dict(meta or {})
+
+    @property
+    def n_points(self) -> int:
+        return len(self.names)
+
+    def trajectory(self, i: int) -> netsim_metrics.Trajectory:
+        """Point ``i`` as a netsim Trajectory (netsim sweeps only)."""
+        if "bits" not in self.metrics:
+            raise ValueError("trajectory(): netsim sweep results only")
+        return netsim_metrics.Trajectory(
+            consensus=self.metrics["consensus"][i],
+            objective=self.metrics["objective"][i],
+            bits=self.metrics["bits"][i],
+            meta={**self.meta, "point": self.names[i]})
+
+
+class SweepRunner:
+    """Runner-protocol adapter executing a whole grid in one jit.
+
+    ``init_state`` runs every point's serial init eagerly and stacks the
+    states (bit-for-bit the per-point serial inits — see module docstring);
+    ``step`` is ``vmap(point_step)`` over the stacked axis; ``run`` executes
+    every point's full trajectory inside ONE jitted function (``lax.map``
+    over points of a ``lax.scan`` over steps — one trace, one dispatch;
+    ``self.traces`` counts traces, pinned to 1 by tests/test_sweep.py).
+
+    ``batch='vmap'`` batches the point axis for accelerator throughput
+    instead of mapping it; on CPU, XLA's batched autodiff dots reassociate
+    reductions, so that mode is last-ulp-close rather than bit-exact.
+    """
+
+    def __init__(self, points: Sequence, *, name: str = "sweep",
+                 spec=None, batch: str = "map"):
+        from repro import api
+        if not points:
+            raise ValueError("sweep needs at least one grid point")
+        if batch not in ("map", "vmap"):
+            raise ValueError(f"batch must be 'map' or 'vmap', got {batch!r}")
+        self.points = list(points)
+        self.name = name
+        self.spec = spec                    # SweepSpec when built from one
+        self.batch = batch
+        base = self.points[0]
+        engine = base.execution.engine
+        if engine == "sharded":
+            raise ValueError(
+                "engine='sharded' sweeps are not supported: the trainer "
+                "owns one SPMD mesh per process and its state is device-"
+                "sharded, not batchable — run sharded grid points as "
+                "separate processes (repro.launch.train)")
+        if engine not in ("dense", "netsim"):
+            raise ValueError(f"sweep supports dense|netsim engines, "
+                             f"got {engine!r}")
+        self.engine = engine
+        self.plan = plan_points(self.points)
+        if engine == "netsim" and "seed" in self.plan.varying \
+                and "seed" in registry.accepts("schedule",
+                                               base.topology.schedule):
+            raise ValueError(
+                f"seed axis with the seed-dependent "
+                f"{base.topology.schedule!r} schedule: the netsim sweep "
+                f"shares ONE materialized schedule stack across points; "
+                f"sweep fault_seed instead, or run seeds serially")
+
+        # template runner: problem / X0 / mixer / oracle / schedule built
+        # once, shared by all points (axes never touch structure)
+        self._template = api.build(base)
+        self.base = base
+        self.traces = 0
+        self._run_cache: Dict[Any, Callable] = {}
+        self._step_fn = None
+
+    # --- per-point serial algorithms (concrete values) ----------------------
+    def _point_algo(self, p):
+        """Point ``p``'s algorithm exactly as ``api.build(p)`` constructs
+        it, but sharing the template's mixer/oracle objects (identical
+        construction inputs, so identical numerics)."""
+        from repro import api
+        t = self._template
+        return api.build_algorithm(p, t.algo.mixer, t.algo.oracle)
+
+    # --- axis binding -------------------------------------------------------
+    def _bind_algo(self, ops):
+        """The template algorithm with one point's traced operands bound.
+
+        Runs inside the mapped trace: ``ops`` values are scalar tracers."""
+        algo = self._template.algo
+        repl = {}
+        for field, base_sched in self.plan.sched.items():
+            if base_sched.kind == "constant":
+                repl[field] = ops[f"{field}:value"]
+            else:                                     # harmonic
+                vt0, t0 = ops[f"{field}:vt0"], ops[f"{field}:t0"]
+                repl[field] = (lambda vt0=vt0, t0=t0:
+                               lambda k: vt0 / (k + t0))()
+        for name in self.plan.params:
+            repl[name] = ops[f"param:{name}"]
+        if self.plan.bits:
+            c = self.base.compressor
+            q = QInf(**registry.kwargs_subset("compressor", "qinf", c.params))
+            repl["compressor"] = _TracedBitsQInf(
+                ops["levels"], q.block, q.use_pallas)
+        return dataclasses.replace(algo, **repl) if repl else algo
+
+    def _ops_stacked(self):
+        return {k: jnp.asarray(v) for k, v in self.plan.operands.items()}
+
+    # --- host-side PRNG-chain + eager-init setup ----------------------------
+    def _dense_setup(self):
+        """(stacked init states, stacked carry keys): the serial
+        ``DenseRunner.run`` prologue — ``k0, key = split(key(seed))``, one
+        eager ``init`` per point — replicated exactly, point by point."""
+        inits, keys = [], []
+        X0 = self._template.X0
+        for p in self.points:
+            key = jax.random.key(p.seed)
+            k0, key = jax.random.split(key)
+            inits.append(self._point_algo(p).init(X0, k0))
+            keys.append(key)
+        return tmap(lambda *ls: jnp.stack(ls), *inits), jnp.stack(keys)
+
+    def _netsim_setup(self):
+        """(stacked init states, stacked per-step key arrays): the serial
+        ``simulate`` prologue — ``keys = split(key(seed), steps + 1)``,
+        eager ``init`` on ``keys[0]`` with the SimMixer-bound algorithm."""
+        t = self._template
+        inits, step_keys = [], []
+        for p in self.points:
+            mixer = netsim_engine.SimMixer(
+                t.schedule, t.faults, jax.random.key(p.fault_seed))
+            algo = dataclasses.replace(self._point_algo(p), mixer=mixer)
+            keys = jax.random.split(jax.random.key(p.seed), p.steps + 1)
+            inits.append(algo.init(t.X0, keys[0]))
+            step_keys.append(keys[1:])
+        return (tmap(lambda *ls: jnp.stack(ls), *inits),
+                jnp.stack(step_keys))
+
+    # --- Runner protocol ----------------------------------------------------
+    @property
+    def n_points(self) -> int:
+        return len(self.points)
+
+    def init_state(self, key=None):
+        """Stacked initial states, one per grid point, each computed by its
+        point's *serial* init (``key`` is ignored — every point derives its
+        init key from its own seed, exactly as ``run`` does)."""
+        if self.engine == "dense":
+            return self._dense_setup()[0]
+        return self._netsim_setup()[0]
+
+    def step(self, state, keys):
+        """``vmap(point_step)``: one update of every grid point.  ``keys``
+        is a stacked (P,) key array (or a single key, split across
+        points).  Netsim points step through their SimMixer (schedule +
+        faults), exactly like ``run`` and the serial runner do."""
+        if self._step_fn is None:
+            t = self._template
+
+            def point_step(ops, st, key, fkey):
+                self.traces += 1
+                algo = self._bind_algo(ops)
+                if self.engine == "netsim":
+                    mixer = netsim_engine.SimMixer(t.schedule, t.faults,
+                                                   fkey)
+                    algo = dataclasses.replace(algo, mixer=mixer)
+                return algo.step(st, key)
+
+            self._step_fn = jax.jit(
+                jax.vmap(point_step, in_axes=(0, 0, 0, 0)))
+        if getattr(keys, "ndim", 1) == 0:
+            keys = jax.random.split(keys, self.n_points)
+        ops = {k: jnp.asarray(np.broadcast_to(v, (self.n_points,)))
+               for k, v in self.plan.operands.items()}
+        ops["_idx"] = jnp.arange(self.n_points)     # ensure >= 1 mapped leaf
+        fault_keys = jnp.stack([jax.random.key(p.fault_seed)
+                                for p in self.points])
+        return self._step_fn(ops, state, keys, fault_keys)
+
+    @property
+    def metrics_fns(self):
+        return {"consensus":
+                lambda st: jax.vmap(netsim_metrics.consensus_error)(st.X),
+                "iteration": lambda st: st.k}
+
+    def state_specs(self, node_axes: Tuple[str, ...] = ()):
+        from jax.sharding import PartitionSpec as P
+        state = jax.eval_shape(self.init_state)
+        return tmap(lambda _: P(), state)
+
+    # --- the one-jit grid run -----------------------------------------------
+    def _grid_call(self, cache_key, point_fn, xs):
+        """jit(map-or-vmap(point_fn))(xs), cached per (mode, steps, fns)."""
+        if cache_key not in self._run_cache:
+            if self.batch == "map":
+                fn = lambda xs: jax.lax.map(point_fn, xs)
+            else:
+                fn = jax.vmap(point_fn)
+            self._run_cache[cache_key] = jax.jit(fn)
+        return self._run_cache[cache_key](xs)
+
+    def run(self, *, num_steps: Optional[int] = None,
+            metric_fn: Optional[Callable] = None,
+            objective_fn: Optional[Callable] = None):
+        """Execute the whole grid: ``(stacked final states, SweepResult)``.
+
+        dense   — optional ``metric_fn(state) -> scalar`` recorded every
+                  step into ``result.metrics['metric']`` (P, steps).
+        netsim  — the simulate() trajectory record (consensus / objective /
+                  bits), per point.
+        """
+        if num_steps is None:
+            num_steps = self.base.steps
+        # the cache entry holds the function objects themselves (not ids):
+        # a GC'd lambda's id can be recycled and would alias a stale trace
+        cache_key = (self.engine, num_steps, metric_fn, objective_fn)
+        t0 = time.time()
+        if self.engine == "dense":
+            state0, keys = self._dense_setup()
+
+            def point_run(args):
+                self.traces += 1
+                state, key, ops = args
+                algo = self._bind_algo(ops)
+
+                def body(carry, _):
+                    state, key = carry
+                    key, sub = jax.random.split(key)
+                    state = algo.step(state, sub)
+                    rec = metric_fn(state) if metric_fn is not None else ()
+                    return (state, key), rec
+
+                (state, _), recs = jax.lax.scan(body, (state, key), None,
+                                                length=num_steps)
+                return state, recs
+
+            final, recs = self._grid_call(
+                cache_key, point_run, (state0, keys, self._ops_stacked()))
+            final = jax.block_until_ready(final)
+            metrics = ({"metric": np.asarray(recs, np.float64)}
+                       if metric_fn is not None else {})
+        else:
+            state0, step_keys = self._netsim_setup()
+            if num_steps != self.base.steps:
+                raise ValueError(
+                    f"netsim sweep: steps is part of the precomputed key "
+                    f"schedule; set base.steps (= {self.base.steps}) "
+                    f"instead of num_steps={num_steps}")
+            t = self._template
+            # per-point payload accounting from the REAL per-point
+            # compressors (the traced twin never computes payload bits);
+            # the counts are exact small integers, so the f32 operand
+            # reproduces the serial python-int arithmetic exactly
+            bpe = jnp.asarray([netsim_metrics.payload_bits_per_node(
+                p.compressor.build(), t.X0) for p in self.points],
+                np.float32)
+            fault_keys = jnp.stack([jax.random.key(p.fault_seed)
+                                    for p in self.points])
+
+            def point_run(args):
+                self.traces += 1
+                state, keys, fkey, bits_per_edge, ops = args
+                mixer = netsim_engine.SimMixer(t.schedule, t.faults, fkey)
+                algo = dataclasses.replace(self._bind_algo(ops), mixer=mixer)
+                body = netsim_engine.make_scan_body(
+                    algo, mixer, t.schedule, objective_fn=objective_fn,
+                    bits_per_edge=bits_per_edge)
+                return jax.lax.scan(body, state, keys)
+
+            final, recs = self._grid_call(
+                cache_key, point_run,
+                (state0, step_keys, fault_keys, bpe, self._ops_stacked()))
+            final = jax.block_until_ready(final)
+            metrics = {k: np.asarray(v, np.float64) for k, v in recs.items()}
+        wall = time.time() - t0
+        sched = (self._template.schedule if self.engine == "netsim" else None)
+        result = SweepResult(
+            [p.name for p in self.points], metrics, wall, self.traces,
+            meta=({"schedule": sched.name, "T_cycle": sched.T_cycle,
+                   "faults": [f.name for f in self._template.faults]}
+                  if sched is not None else {}))
+        return final, result
+
+    def point_state(self, state, i: int):
+        """Slice grid point ``i`` out of a stacked state pytree."""
+        return tmap(lambda l: l[i], state)
+
+
+def runner_for_points(points: Sequence, *, name: str = "sweep",
+                      batch: str = "map") -> SweepRunner:
+    """Batch an explicit list of per-point ``ExperimentSpec``s (all sharing
+    one structure) into a SweepRunner — the upgrade path for benchmark
+    scripts that enumerate their grids cell by cell."""
+    return SweepRunner(points, name=name, batch=batch)
+
+
+def group_points(points: Sequence) -> List[List[int]]:
+    """Partition spec indices into one-trace groups: two points share a
+    group iff they differ only along :data:`SUPPORTED_AXES` (checked with
+    the same classifier the runner uses).  Greedy and order-preserving."""
+    groups: List[List[int]] = []
+    for i, p in enumerate(points):
+        for g in groups:
+            try:
+                plan_points([points[g[0]], p])
+            except ValueError:
+                continue
+            g.append(i)
+            break
+        else:
+            groups.append([i])
+    return groups
+
+
+# ===========================================================================
+# Engine registration (repro.api.build(SweepSpec) resolves through this)
+# ===========================================================================
+
+@registry.register_engine("sweep")
+def _build_sweep(spec, mesh=None) -> SweepRunner:
+    # duck-typed rather than isinstance: `python -m repro.api` runs the api
+    # module as __main__, whose SweepSpec class is distinct from
+    # repro.api.SweepSpec
+    if not (hasattr(spec, "base") and hasattr(spec, "points")):
+        raise ValueError(
+            "the sweep engine takes a SweepSpec (a base ExperimentSpec "
+            "plus axes), not an ExperimentSpec with engine='sweep'")
+    if mesh is not None:
+        raise ValueError("sweep engine: no mesh (dense/netsim only)")
+    return SweepRunner(spec.points(), name=spec.name, spec=spec)

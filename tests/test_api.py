@@ -106,7 +106,7 @@ class TestSpecRoundTrip:
         assert len(files) >= 6, "golden spec set went missing"
         for f in files:
             spec = api.check_spec_file(f)   # raises on round-trip/build fail
-            assert isinstance(spec, api.ExperimentSpec)
+            assert isinstance(spec, (api.ExperimentSpec, api.SweepSpec))
 
     def test_spec_save_load(self, tmp_path):
         s = tiny_spec()

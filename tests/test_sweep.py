@@ -1,0 +1,324 @@
+"""The one-jit sweep engine (repro.sweep + api.SweepSpec).
+
+The hard constraint: every grid point of a sweep run is BIT-FOR-BIT equal
+to its serial ``api.build(point).run(...)`` result, and the whole grid runs
+as ONE jitted computation (trace count == 1).  Covers dense ProxLEAD, a
+baseline (LessBit + LSVRG), and a netsim sweep (schedule + faults), plus
+SweepSpec JSON round-trips, the golden sweep spec, grouping, and the
+rejection paths.
+"""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, sweep
+
+GOLDEN = pathlib.Path(__file__).parent / "golden_specs"
+
+TINY = {"n_features": 8, "n_classes": 3, "n_per_node": 8, "n_batches": 2}
+
+
+def tiny_spec(**over):
+    base = dict(
+        name="tiny", n_nodes=4, steps=4, seed=0,
+        algorithm=api.AlgorithmSpec("prox_lead", eta=api.constant(0.05),
+                                    gamma=api.constant(0.5)),
+        compressor=api.CompressorSpec("qinf", {"bits": 2, "block": 3}),
+        topology=api.TopologySpec(graph="ring"),
+        prox=api.ProxSpec("l1", {"lam": 1e-3}),
+        oracle=api.OracleSpec(name="full", problem="logreg2d",
+                              problem_params=TINY),
+        execution=api.ExecutionSpec(engine="dense"))
+    base.update(over)
+    return api.ExperimentSpec(**base)
+
+
+def leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# SweepSpec: expansion + serialization
+# ---------------------------------------------------------------------------
+
+class TestSweepSpec:
+    def _spec(self):
+        return api.SweepSpec(
+            name="grid", base=tiny_spec(),
+            axes=(api.AxisSpec("seed", (0, 1)),
+                  api.AxisSpec("compressor.bits", (2, 4)),
+                  api.AxisSpec("algorithm.eta", (0.05, 0.03))))
+
+    def test_points_cartesian_product_later_axes_fastest(self):
+        ss = self._spec()
+        pts = ss.points()
+        assert len(pts) == ss.n_points == 8
+        assert [p.seed for p in pts] == [0, 0, 0, 0, 1, 1, 1, 1]
+        assert [p.compressor.params["bits"] for p in pts] == \
+            [2, 2, 4, 4, 2, 2, 4, 4]
+        assert pts[0].algorithm.eta.value == pytest.approx(0.05)
+        assert pts[1].algorithm.eta.value == pytest.approx(0.03)
+        assert pts[0].name == "tiny@seed=0,compressor.bits=2,algorithm.eta=0.05"
+
+    def test_json_round_trip(self):
+        ss = self._spec()
+        assert ss == api.SweepSpec.from_json(ss.to_json())
+
+    def test_save_load(self, tmp_path):
+        ss = self._spec()
+        p = ss.save(tmp_path / "s.json")
+        assert api.SweepSpec.load(p) == ss
+
+    def test_golden_sweep_spec_roundtrips_and_builds(self):
+        f = GOLDEN / "sweep_lead_seed_x_bits.json"
+        assert f.exists(), "golden sweep spec went missing"
+        spec = api.check_spec_file(f)
+        assert isinstance(spec, api.SweepSpec)
+        assert spec.n_points >= 4
+
+    def test_unknown_axis_path_raises(self):
+        with pytest.raises(ValueError, match="unknown sweep axis"):
+            api.set_axis_value(tiny_spec(), "topology.graph", "ring")
+
+    def test_axis_cli_shorthand(self):
+        ax = api.parse_axis("seed=0:16")
+        assert ax == api.AxisSpec("seed", tuple(range(16)))
+        ax = api.parse_axis("compressor.bits=2,4,8")
+        assert ax == api.AxisSpec("compressor.bits", (2, 4, 8))
+        ax = api.parse_axis("algorithm.eta=0.05,0.1")
+        assert ax.values == (0.05, 0.1)
+        with pytest.raises(ValueError, match="path=values"):
+            api.parse_axis("seed")
+
+
+# ---------------------------------------------------------------------------
+# Parity: one-jit grid == serial per-point runs, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestDenseSweepParity:
+    def test_16_point_grid_bitforbit_single_trace(self):
+        """The acceptance grid: 16 points (seed x bits x eta), ONE trace,
+        every point's final state bit-for-bit equal to its serial
+        spec-built run."""
+        ss = api.SweepSpec(
+            name="grid16", base=tiny_spec(),
+            axes=(api.AxisSpec("seed", (0, 1, 2, 3)),
+                  api.AxisSpec("compressor.bits", (2, 4)),
+                  api.AxisSpec("algorithm.eta", (0.05, 0.03))))
+        runner = api.build(ss)
+        assert runner.n_points == 16
+        final, res = runner.run()
+        assert runner.traces == 1, \
+            "the grid must compile as ONE computation (single trace)"
+        for i, p in enumerate(runner.points):
+            serial, _ = api.build(p).run()
+            pt = runner.point_state(final, i)
+            assert leaves_equal(pt.X, serial.X), p.name
+            assert leaves_equal(pt.D, serial.D), p.name
+            assert leaves_equal(pt.comm, serial.comm), p.name
+            assert leaves_equal(pt.oracle, serial.oracle), p.name
+            assert int(pt.k) == int(serial.k)
+
+    def test_metric_recording_shape(self):
+        ss = api.SweepSpec(name="m", base=tiny_spec(),
+                           axes=(api.AxisSpec("seed", (0, 1)),))
+        runner = api.build(ss)
+        final, res = runner.run(
+            metric_fn=lambda st: jnp.sum(st.X ** 2))
+        assert res.metrics["metric"].shape == (2, 4)
+        assert np.all(np.isfinite(res.metrics["metric"]))
+
+    def test_baseline_sweep_bitforbit(self):
+        """A baseline algorithm (LessBit, LSVRG oracle) sweeps its own
+        dataclass field (theta) x seed, bit for bit."""
+        base = tiny_spec(
+            algorithm=api.AlgorithmSpec(
+                "lessbit", eta=api.constant(0.05), alpha=api.constant(0.5),
+                params={"theta": 0.2}),
+            compressor=api.CompressorSpec("qinf", {"bits": 4, "block": 3}),
+            prox=api.ProxSpec("none"),
+            oracle=api.OracleSpec(name="lsvrg", problem="logreg2d",
+                                  problem_params=TINY),
+            steps=3)
+        ss = api.SweepSpec(
+            name="lb", base=base,
+            axes=(api.AxisSpec("algorithm.params.theta", (0.2, 0.1)),
+                  api.AxisSpec("seed", (0, 5))))
+        runner = api.build(ss)
+        final, _ = runner.run()
+        assert runner.traces == 1
+        for i, p in enumerate(runner.points):
+            serial, _ = api.build(p).run()
+            assert leaves_equal(runner.point_state(final, i), serial), p.name
+
+    def test_harmonic_schedule_axes_bitforbit(self):
+        base = tiny_spec(
+            algorithm=api.AlgorithmSpec(
+                "lead", eta=api.ScheduleSpec("harmonic", 0.1, t0=8.0),
+                alpha=api.constant(0.5), gamma=api.constant(0.5)),
+            prox=api.ProxSpec("none"), steps=3)
+        ss = api.SweepSpec(
+            name="h", base=base,
+            axes=(api.AxisSpec("algorithm.eta.value", (0.1, 0.07)),
+                  api.AxisSpec("algorithm.eta.t0", (8.0, 16.0))))
+        runner = api.build(ss)
+        final, _ = runner.run()
+        for i, p in enumerate(runner.points):
+            serial, _ = api.build(p).run()
+            assert leaves_equal(runner.point_state(final, i), serial), p.name
+
+    def test_runner_protocol_step_and_init(self):
+        ss = api.SweepSpec(name="p", base=tiny_spec(),
+                           axes=(api.AxisSpec("seed", (0, 1, 2)),))
+        runner = api.build(ss)
+        states = runner.init_state()
+        assert jax.tree_util.tree_leaves(states)[0].shape[0] == 3
+        keys = jnp.stack([jax.random.key(i) for i in range(3)])
+        states = runner.step(states, keys)
+        cons = runner.metrics_fns["consensus"](states)
+        assert cons.shape == (3,) and np.all(np.isfinite(cons))
+        specs = runner.state_specs()
+        assert jax.tree_util.tree_structure(specs) is not None
+
+
+class TestNetsimSweepParity:
+    def _base(self):
+        return tiny_spec(
+            name="ntiny", steps=5, seed=2, fault_seed=3,
+            topology=api.TopologySpec(graph="ring", schedule="alternating"),
+            faults=(api.FaultSpec("linkdrop", {"rate": 0.2}),),
+            execution=api.ExecutionSpec(engine="netsim"))
+
+    def test_netsim_sweep_bitforbit_incl_trajectory(self):
+        ss = api.SweepSpec(
+            name="ns", base=self._base(),
+            axes=(api.AxisSpec("seed", (2, 3)),
+                  api.AxisSpec("fault_seed", (3, 4)),
+                  api.AxisSpec("compressor.bits", (2, 4))))
+        runner = api.build(ss)
+        final, res = runner.run()
+        assert runner.traces == 1
+        assert runner.n_points == 8
+        for i, p in enumerate(runner.points):
+            f2, t2 = api.build(p).run()
+            pt = runner.point_state(final, i)
+            assert leaves_equal(pt.X, f2.X), p.name
+            assert leaves_equal(pt.comm, f2.comm), p.name
+            np.testing.assert_array_equal(res.metrics["bits"][i], t2.bits)
+            np.testing.assert_array_equal(res.metrics["consensus"][i],
+                                          t2.consensus)
+            traj = res.trajectory(i)
+            assert traj.total_bits == t2.total_bits
+
+    def test_protocol_step_uses_simmixer(self):
+        """The Runner-protocol ``step`` must run the schedule+faults
+        SimMixer like ``run`` does — not the placeholder DenseMixer the
+        netsim template carries (regression)."""
+        base = self._base()
+        ss = api.SweepSpec(name="st", base=base,
+                           axes=(api.AxisSpec("seed", (2, 3)),))
+        runner = api.build(ss)
+        states = runner.init_state()
+        key = jax.random.key(7)
+        keys = jnp.stack([key, key])
+        stepped = runner.step(states, keys)
+        serial = api.build(base)          # NetsimRunner: SimMixer-bound
+        want = serial.step(runner.point_state(states, 0), key)
+        np.testing.assert_allclose(
+            np.asarray(runner.point_state(stepped, 0).X),
+            np.asarray(want.X), rtol=1e-12, atol=1e-14)
+
+    def test_seed_axis_with_seed_dependent_schedule_rejected(self):
+        base = tiny_spec(
+            topology=api.TopologySpec(graph="ring",
+                                      schedule="random_matching", rounds=4),
+            execution=api.ExecutionSpec(engine="netsim"))
+        ss = api.SweepSpec(name="bad", base=base,
+                           axes=(api.AxisSpec("seed", (0, 1)),))
+        with pytest.raises(ValueError, match="schedule stack"):
+            api.build(ss)
+
+    def test_fault_seed_axis_on_dense_rejected(self):
+        ss = api.SweepSpec(name="bad", base=tiny_spec(),
+                           axes=(api.AxisSpec("fault_seed", (0, 1)),))
+        with pytest.raises(ValueError, match="netsim engine only"):
+            api.build(ss)
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+class TestSweepGuards:
+    def test_sharded_engine_rejected(self):
+        base = api.ExperimentSpec(
+            name="sh", n_nodes=2, steps=1,
+            model=api.ModelSpec(n_layers=1, d_model=64),
+            execution=api.ExecutionSpec(engine="sharded"))
+        ss = api.SweepSpec(name="bad", base=base,
+                           axes=(api.AxisSpec("seed", (0, 1)),))
+        with pytest.raises(ValueError, match="sharded.*not supported"):
+            api.build(ss)
+
+    def test_bits_axis_needs_qinf(self):
+        base = tiny_spec(compressor=api.CompressorSpec("identity"))
+        ss = api.SweepSpec(name="bad", base=base,
+                           axes=(api.AxisSpec("compressor.bits", (2, 4)),))
+        with pytest.raises(ValueError, match="qinf"):
+            api.build(ss)
+
+    def test_structurally_different_points_rejected(self):
+        a = tiny_spec()
+        b = tiny_spec(topology=api.TopologySpec(graph="exponential"))
+        with pytest.raises(ValueError, match="unsupported sweep axis"):
+            sweep.runner_for_points([a, b])
+
+    def test_engine_sweep_via_experiment_spec_rejected(self):
+        from repro import registry
+        with pytest.raises(ValueError, match="SweepSpec"):
+            registry.make("engine", "sweep", spec=tiny_spec())
+
+    def test_group_points_partitions_by_structure(self):
+        pts = [tiny_spec(seed=0),
+               tiny_spec(seed=1),
+               tiny_spec(compressor=api.CompressorSpec(
+                   "qinf", {"bits": 4, "block": 3})),
+               tiny_spec(topology=api.TopologySpec(graph="exponential")),
+               tiny_spec(compressor=api.CompressorSpec("identity"))]
+        groups = sweep.group_points(pts)
+        assert groups == [[0, 1, 2], [3], [4]]
+
+    def test_group_points_param_present_vs_absent(self):
+        """A param set on one point and default-omitted on another must
+        land in separate groups, not crash the partition (regression:
+        KeyError escaped group_points' ValueError handling)."""
+        a = tiny_spec(algorithm=api.AlgorithmSpec(
+            "lessbit", eta=api.constant(0.05), alpha=api.constant(0.5),
+            params={"theta": 0.2}), prox=api.ProxSpec("none"))
+        b = tiny_spec(algorithm=api.AlgorithmSpec(
+            "lessbit", eta=api.constant(0.05), alpha=api.constant(0.5)),
+            prox=api.ProxSpec("none"))
+        assert sweep.group_points([a, b]) == [[0], [1]]
+
+    def test_vmap_mode_runs_and_is_close(self):
+        """batch='vmap' (accelerator-throughput mode) executes the same
+        grid; on CPU XLA's batched backward-pass dots reassociate, so the
+        contract is allclose, not bit-equality."""
+        ss = api.SweepSpec(name="v", base=tiny_spec(),
+                           axes=(api.AxisSpec("seed", (0, 1)),))
+        runner = sweep.SweepRunner(ss.points(), batch="vmap")
+        final, _ = runner.run()
+        assert runner.traces == 1
+        for i, p in enumerate(runner.points):
+            serial, _ = api.build(p).run()
+            np.testing.assert_allclose(
+                np.asarray(runner.point_state(final, i).X),
+                np.asarray(serial.X), rtol=1e-12, atol=1e-12)

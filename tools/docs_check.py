@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""docs-check: every path/symbol reference in the docs must resolve.
+
+Scans markdown files for two reference forms and fails loudly when one
+does not resolve against the working tree:
+
+* ``[[path]]`` / ``[[path::Symbol]]``  — explicit doc cross-references;
+* bare repo paths like ``src/repro/core/comm.py`` (also ``benchmarks/``,
+  ``tests/``, ``tools/``, ``examples/``, ``docs/``), optionally suffixed
+  ``::Symbol``.
+
+A ``::Symbol`` must appear in the file as a ``def``/``class`` definition or
+a module-level assignment.  Run via ``make docs-check`` (part of
+``make ci``):
+
+  python tools/docs_check.py docs README.md
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_BARE = re.compile(
+    r"\b((?:src/repro|benchmarks|tests|tools|examples|docs)"
+    r"(?:/[A-Za-z0-9_.-]+)*\.(?:py|md|json))(?:::([A-Za-z_][A-Za-z0-9_]*))?")
+_WIKI = re.compile(r"\[\[([^\]|#]+?)(?:::([A-Za-z_][A-Za-z0-9_]*))?\]\]")
+
+
+def _symbol_defined(path: pathlib.Path, symbol: str) -> bool:
+    text = path.read_text(errors="replace")
+    pat = re.compile(
+        rf"^\s*(?:def|class)\s+{re.escape(symbol)}\b"
+        rf"|^{re.escape(symbol)}\s*[:=]", re.MULTILINE)
+    return bool(pat.search(text))
+
+
+def check_file(md: pathlib.Path) -> list:
+    errors = []
+    md = md.resolve()
+    text = md.read_text(errors="replace")
+    refs = []
+    for m in _WIKI.finditer(text):
+        refs.append((m.group(1).strip(), m.group(2), m.group(0)))
+    for m in _BARE.finditer(text):
+        refs.append((m.group(1), m.group(2), m.group(0)))
+    for path_str, symbol, raw in refs:
+        target = ROOT / path_str
+        if not target.exists():
+            errors.append(f"{md.relative_to(ROOT)}: {raw!r} -> "
+                          f"{path_str} does not exist")
+            continue
+        if symbol and not _symbol_defined(target, symbol):
+            errors.append(f"{md.relative_to(ROOT)}: {raw!r} -> no "
+                          f"def/class/assignment {symbol!r} in {path_str}")
+    return errors
+
+
+def main(argv) -> int:
+    targets = argv or ["docs", "README.md"]
+    files = []
+    for t in targets:
+        p = ROOT / t
+        if p.is_dir():
+            files.extend(sorted(p.glob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"[docs-check] FAIL: no such file/dir {t}")
+            return 1
+    if not files:
+        print("[docs-check] FAIL: no markdown files found")
+        return 1
+    errors = []
+    n_refs = 0
+    for f in files:
+        errs = check_file(f)
+        text = f.read_text(errors="replace")
+        n_refs += len(_WIKI.findall(text)) + len(_BARE.findall(text))
+        errors.extend(errs)
+    for e in errors:
+        print(f"[docs-check] FAIL: {e}")
+    if errors:
+        return 1
+    print(f"[docs-check] OK: {n_refs} references across "
+          f"{len(files)} files all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
