@@ -1,7 +1,16 @@
 # One-command gates for every PR.
 PY ?= python
 
-.PHONY: test bench-smoke lint ci spec-golden docs-check
+# perf-gate ratio tolerance: walltime-derived ratios (wire speedup, sweep
+# speedup-vs-serial) may not fall below (1 - PERF_TOL) x the best value in
+# benchmarks/history/.  0.5 absorbs the ~1.4-2.5x run-to-run jitter of CPU
+# walltime speedups observed across smoke runs (CHANGES.md PR 5); exact
+# metrics (payload bits, collective counts, hops, trace counts) are gated
+# bit-for-bit at ANY tolerance, so accounting regressions always fail.
+PERF_TOL ?= 0.5
+
+.PHONY: test bench-smoke lint ci spec-golden docs-check perf-gate \
+	perf-baseline
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -17,14 +26,26 @@ spec-golden:
 docs-check:
 	$(PY) tools/docs_check.py docs README.md
 
+# perf gate: compare the fresh BENCH_*.json smoke snapshots against the
+# committed history under benchmarks/history/ (tolerance: PERF_TOL above)
+perf-gate:
+	$(PY) tools/perf_gate.py --tol $(PERF_TOL)
+
+# append the current BENCH_*.json snapshots to benchmarks/history/ —
+# run after an INTENTIONAL perf/accounting change, commit the result
+perf-baseline:
+	$(PY) tools/perf_gate.py --tol $(PERF_TOL) --update
+
 # full PR gate: tier-1 + spec goldens + docs references + benchmark smoke
 # (emits BENCH_netsim.json / BENCH_comm.json / BENCH_wire.json /
 # BENCH_sweep.json at the repo root so the bench trajectory accumulates;
 # the netsim suite drives grouped one-jit sweeps through ExperimentSpec,
 # the wire suite measures bucketed vs per-leaf gossip in an 8-device
 # subprocess, the sweep suite gates one-jit-vs-serial parity + speedup)
+# + perf-gate: the fresh snapshots must not regress vs benchmarks/history/
 ci: test spec-golden docs-check
 	PYTHONPATH=src:. $(PY) -m benchmarks.run --smoke
+	$(PY) tools/perf_gate.py --tol $(PERF_TOL)
 
 # netsim robustness benchmark at tiny sizes (fast sanity sweep)
 bench-smoke:

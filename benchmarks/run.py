@@ -110,10 +110,15 @@ def main(argv=None):
         print(f"[{mark}] ({key}) {claim}   [{detail}]")
     print(f"\n{len(all_checks) - n_fail}/{len(all_checks)} claims validated")
 
+    # env stamp: every results file records the machine class it ran on,
+    # so tools/perf_gate.py history comparisons stay attributable
+    from repro.obs import env_info
+    env = env_info()
+
     out = pathlib.Path(args.json_out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(
-        {"rows": all_rows,
+        {"env": env, "rows": all_rows,
          "checks": [{"suite": k, "claim": c, "ok": bool(o), "detail": str(d)}
                     for k, c, o, d in all_checks]}, indent=1, default=str))
     print("results written to", out)
@@ -124,7 +129,8 @@ def main(argv=None):
                 continue
             p = pathlib.Path(f"BENCH_{key}.json")
             p.write_text(json.dumps(
-                {"suite": key, "steps": steps, "rows": all_rows[key],
+                {"suite": key, "steps": steps, "env": env,
+                 "rows": all_rows[key],
                  "checks": [{"claim": c, "ok": bool(o), "detail": str(d)}
                             for k, c, o, d in all_checks if k == key]},
                 indent=1, default=str))

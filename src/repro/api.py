@@ -58,8 +58,9 @@ from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro import registry
+from repro import obs, registry
 # imported for their registration side effects (compressors, proxes,
 # oracles, topologies, schedules, faults, algorithms, problems)
 from repro.core import baselines as _baselines            # noqa: F401
@@ -749,8 +750,14 @@ class Runner:
                                      sharded engine delegates to the
                                      trainer; host-resident engines return
                                      a replicated tree).
+    ``last_report``                — :class:`repro.obs.RunReport` from the
+                                     most recent ``run()``: env stamp,
+                                     compute-vs-wire step-time breakdown,
+                                     and exact bits-on-wire (None until a
+                                     run completes).
     """
     spec: Optional[ExperimentSpec] = None
+    last_report: Optional[obs.RunReport] = None
 
     def init_state(self, key):
         raise NotImplementedError
@@ -813,15 +820,43 @@ class DenseRunner(Runner):
         if key is None:
             key = self.spec.seed if self.spec else 0
         key = jax.random.key(key) if isinstance(key, int) else key
-        k0, key = jax.random.split(key)
-        state = self.algo.init(X0 if X0 is not None else self.X0, k0)
-        logs = []
-        for t in range(num_steps):
-            key, sub = jax.random.split(key)
-            state = self._jit_step(state, sub)
-            if callback is not None and log_every and t % log_every == 0:
-                logs.append(callback(state, t))
+        meters = obs.Meters()
+        with obs.using_meters(meters), obs.span("run_total", meters) as sp:
+            k0, key = jax.random.split(key)
+            state = self.algo.init(X0 if X0 is not None else self.X0, k0)
+            logs = []
+            for t in range(num_steps):
+                key, sub = jax.random.split(key)
+                state = self._jit_step(state, sub)
+                if callback is not None and log_every and t % log_every == 0:
+                    logs.append(callback(state, t))
+            sp.ready(state)
+        self.last_report = obs.build_report(
+            name=self.spec.name if self.spec else "dense",
+            engine="dense", steps=num_steps, total_s=sp.elapsed_s,
+            bits_per_step=self.bits_per_step(
+                X0 if X0 is not None else self.X0),
+            scope="node", meters=meters,
+            extra={"algo": getattr(self.algo, "name",
+                                   type(self.algo).__name__)})
         return state, logs
+
+    def bits_per_step(self, X=None) -> float:
+        """Exact bits ONE node sends per step: per-edge payload bits
+        (``netsim.metrics.payload_bits_per_node`` — the same accounting
+        the netsim engine charges) times the node's out-degree under the
+        mixer's W support.  0.0 when the mixer has no explicit W
+        (nothing to price)."""
+        X = X if X is not None else self.X0
+        per_edge = netsim_metrics.payload_bits_per_node(
+            getattr(self.algo, "compressor", None), X)
+        W = getattr(getattr(self.algo, "mixer", None), "W", None)
+        if W is None:
+            return 0.0
+        Wn = np.abs(np.asarray(W))
+        n = Wn.shape[0]
+        directed = int((Wn > 1e-12).sum() - (np.diag(Wn) > 1e-12).sum())
+        return per_edge * directed / n
 
 
 
@@ -854,14 +889,30 @@ class NetsimRunner(Runner):
             fault_seed: Optional[int] = None, objective_fn=None, X0=None):
         """-> (final_state, netsim.metrics.Trajectory)."""
         sp = self.spec
-        return netsim_engine.simulate(
-            self.algo, self.schedule, self.faults,
-            X0=X0 if X0 is not None else self.X0,
-            steps=steps if steps is not None else (sp.steps if sp else 0),
-            seed=seed if seed is not None else (sp.seed if sp else 0),
-            fault_seed=fault_seed if fault_seed is not None
-            else (sp.fault_seed if sp else 0),
-            objective_fn=objective_fn)
+        meters = obs.Meters()
+        with obs.using_meters(meters), obs.span("run_total", meters) as tsp:
+            final, traj = netsim_engine.simulate(
+                self.algo, self.schedule, self.faults,
+                X0=X0 if X0 is not None else self.X0,
+                steps=steps if steps is not None else (sp.steps if sp else 0),
+                seed=seed if seed is not None else (sp.seed if sp else 0),
+                fault_seed=fault_seed if fault_seed is not None
+                else (sp.fault_seed if sp else 0),
+                objective_fn=objective_fn)
+            tsp.ready(final)
+        # trajectory bits are the fault-exact SYSTEM total per round (every
+        # directed edge that actually carried a payload), not one node's
+        self.last_report = obs.build_report(
+            name=sp.name if sp else "netsim", engine="netsim",
+            steps=traj.steps, total_s=tsp.elapsed_s,
+            bits_per_step=(traj.total_bits / traj.steps if traj.steps
+                           else 0.0),
+            bits_total=traj.total_bits, scope="system", meters=meters,
+            extra={"algo": traj.meta.get("algo"),
+                   "schedule": traj.meta.get("schedule"),
+                   "final_consensus": (float(traj.consensus[-1])
+                                       if traj.steps else None)})
+        return final, traj
 
 
 
@@ -906,16 +957,66 @@ class TrainerRunner(Runner):
             num_steps = sp.steps if sp else 0
         if data is None:
             data = self.default_data()
-        if state is None:
-            state = self.init_state(
-                key if key is not None else jax.random.key(0))
-        logs = []
-        t0 = int(state.step)
-        for t in range(t0, t0 + num_steps):
-            state, metrics = self.step(state, data.batch_at(t))
-            if callback is not None and log_every and t % log_every == 0:
-                logs.append(callback(state, metrics, t))
+        meters = obs.Meters()
+        with obs.using_meters(meters), obs.span("run_total", meters) as tsp:
+            if state is None:
+                state = self.init_state(
+                    key if key is not None else jax.random.key(0))
+            logs = []
+            t0 = int(state.step)
+            for t in range(t0, t0 + num_steps):
+                state, metrics = self.step(state, data.batch_at(t))
+                if callback is not None and log_every and t % log_every == 0:
+                    logs.append(callback(state, metrics, t))
+            tsp.ready(state)
+        bits = self.bits_per_step(state)
+        mean_step = tsp.elapsed_s / num_steps if num_steps else 0.0
+        self.last_report = obs.build_report(
+            name=sp.name if sp else "trainer", engine="sharded",
+            steps=num_steps, total_s=tsp.elapsed_s, bits_per_step=bits,
+            scope="node", meters=meters,
+            roofline=self._wire_roofline(state, mean_step),
+            extra={"backend": self.trainer.tcfg.backend,
+                   "wire_mode": self.trainer.tcfg.wire_mode})
         return state, logs
+
+    def bits_per_step(self, state) -> float:
+        """Exact bits ONE node ships per train step.  Neighbor/ring
+        backends: gossip hops x the per-edge u8 wire payload — the
+        ``netsim.metrics.{bucketed,sharded}_payload_bits`` accounting the
+        tests pin byte-for-byte against HLO-parsed collective-permute
+        bytes.  Dense backend: ideal per-edge payload x W out-degree
+        (no collectives to parse)."""
+        tr = self.trainer
+        leaves = jax.tree_util.tree_leaves(state.plead.X)
+        if tr.plan is not None:
+            hops = len(tr.plan.hops)
+            if tr.tcfg.wire_mode == "bucketed":
+                per_edge = netsim_metrics.bucketed_payload_bits(tr, leaves)
+            else:
+                per_edge = netsim_metrics.sharded_payload_bits(tr, leaves)
+            return float(hops * per_edge)
+        per_edge = netsim_metrics.payload_bits_per_node(
+            tr.compressor, state.plead.X)
+        W = getattr(tr.mixer, "W", None)
+        if W is None:
+            return 0.0
+        Wn = np.abs(np.asarray(W))
+        directed = int((Wn > 1e-12).sum() - (np.diag(Wn) > 1e-12).sum())
+        return per_edge * directed / Wn.shape[0]
+
+    def _wire_roofline(self, state, mean_step_s: float) -> dict:
+        """Kernel/wire roofline for the bucketed gossip path (empty dict
+        when this trainer has no bucket layout to price)."""
+        tr = self.trainer
+        from repro.core.compression import Identity
+        if tr.plan is None or isinstance(tr.compressor, Identity) \
+                or tr.tcfg.wire_mode != "bucketed":
+            return {}
+        layout, _model = obs.trainer_wire_layout(
+            tr, jax.tree_util.tree_leaves(state.plead.X))
+        return obs.step_roofline(layout, hops=len(tr.plan.hops),
+                                 measured_step_s=mean_step_s or None)
 
     def default_data(self):
         if self.spec is None or self.spec.model is None:

@@ -50,6 +50,8 @@ def main(argv=None):
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--report", default=None,
+                    help="write the run's RunReport JSON here")
     ap.add_argument("--print-spec", action="store_true",
                     help="print the resolved ExperimentSpec JSON and exit")
     args = ap.parse_args(argv)
@@ -59,33 +61,36 @@ def main(argv=None):
         print(spec.to_json())
         return None
     runner = api.build(spec)
-    state = runner.init_state(jax.random.key(0))
-    data = runner.default_data()
 
-    bits_per_step = None
     t0 = time.time()
-    for t in range(args.steps):
-        state, metrics = runner.step(state, data.batch_at(t))
-        if bits_per_step is None:
-            # per-leaf accounting: payload_bits blocks along each leaf's
-            # last dim (incl. padding), so a flattened total undercounts
-            from repro.netsim.metrics import payload_bits_per_node
-            bits_per_step = payload_bits_per_node(
-                runner.trainer.compressor, state.plead.X)
-        if t % args.log_every == 0 or t == args.steps - 1:
-            print(f"step {t:5d}  loss {float(metrics['loss']):.4f}  "
-                  f"consensus {float(metrics['consensus']):.3e}  "
-                  f"({(time.time() - t0) / (t + 1):.2f}s/step)")
-    if bits_per_step is not None:
-        # bits_per_step is only measured once a step has run (--steps 0
-        # leaves it None: nothing was communicated, so nothing to report)
-        comm_gb = bits_per_step / 8e9 * args.steps
+
+    def log_cb(state, metrics, t):
+        print(f"step {t:5d}  loss {float(metrics['loss']):.4f}  "
+              f"consensus {float(metrics['consensus']):.3e}  "
+              f"({(time.time() - t0) / (t + 1):.2f}s/step)")
+
+    state, _ = runner.run(num_steps=args.steps, key=jax.random.key(0),
+                          callback=log_cb,
+                          log_every=max(1, args.log_every))
+
+    # comm volume comes from the RunReport's exact wire accounting — the
+    # SAME number runner.last_report carries, so CLI and report can never
+    # disagree (neighbor/ring backends: hops x u8 wire payload, byte-
+    # matched against HLO collective-permutes; dense: per-edge payload x
+    # W out-degree)
+    rep = runner.last_report
+    if rep is not None and rep.wire["bits_per_step"]:
+        comm_gb = rep.wire["bits_total"] / 8e9
         desc = (f"{args.compressor}, {args.bits}-bit"
                 if args.compressor == "qinf" else args.compressor)
         print(f"done: {args.steps} steps; ~{comm_gb:.3f} GB "
-              f"communicated/node ({desc})")
+              f"communicated/node ({desc}); "
+              f"wire fraction {rep.timing['wire_fraction_of_step']:.1%} "
+              f"of {rep.timing['mean_step_s']:.2f}s/step")
     else:
         print("done")
+    if args.report and rep is not None:
+        print("run report written to", rep.save(args.report))
     if args.ckpt:
         runner.save(args.ckpt, state, step=args.steps)
         print("checkpoint saved to", args.ckpt)

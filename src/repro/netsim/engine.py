@@ -32,6 +32,8 @@ from repro.core.prox_lead import ProxLEAD
 from repro.netsim import faults as faults_mod
 from repro.netsim import metrics as metrics_mod
 from repro.netsim.schedule import ScheduledMixer, TopologySchedule
+from repro.obs.meters import current_meters
+from repro.obs.trace import span
 
 
 class SimMixer(ScheduledMixer):
@@ -190,8 +192,15 @@ def simulate(algo, schedule: TopologySchedule,
 
     body = make_scan_body(algo, mixer, schedule, objective_fn=objective_fn,
                           bits_per_edge=bits_per_edge)
-    final, recs = jax.jit(
-        lambda s, ks: jax.lax.scan(body, s, ks))(state0, keys[1:])
+    m = current_meters()
+    if m is not None:
+        m.set("netsim/bits_per_edge_per_round", bits_per_edge)
+        m.set("netsim/steps", steps)
+        m.set("netsim/n_nodes", schedule.n)
+    with span("netsim_scan") as sp:
+        final, recs = jax.jit(
+            lambda s, ks: jax.lax.scan(body, s, ks))(state0, keys[1:])
+        sp.ready((final, recs))
 
     traj = metrics_mod.Trajectory(
         consensus=np.asarray(recs["consensus"], np.float64),

@@ -1,0 +1,68 @@
+"""Wall-clock spans that are correct under JAX's async dispatch.
+
+``jax.jit`` returns before the device work finishes, so a naive
+``time.perf_counter()`` pair around a jitted call measures dispatch, not
+execution.  A :func:`span` yields a handle whose ``ready(x)`` calls
+``jax.block_until_ready`` on the step outputs — call it on whatever the
+span produced before the with-block closes and the recorded time covers
+the actual device work::
+
+    with span("run_total") as sp:
+        for t in range(steps):
+            state = step(state, key)
+        sp.ready(state)                  # fence: drain the async queue
+
+On exit the elapsed seconds accumulate into the ambient
+:class:`~repro.obs.meters.Meters` (if any) as ``time/<name>_s`` plus an
+occurrence counter ``time/<name>_n`` — counter semantics, so nested loops
+of short spans sum.
+
+:func:`annotate` wraps ``jax.profiler.TraceAnnotation`` when the profiler
+is available (names show up in TensorBoard / perfetto traces) and
+degrades to a no-op context manager otherwise.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Optional
+
+import jax
+
+from repro.obs.meters import Meters, current_meters
+
+
+class Span:
+    """Handle yielded by :func:`span`; ``elapsed_s`` is set on exit."""
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.elapsed_s: float = 0.0
+
+    def ready(self, x):
+        """Block until every array in pytree ``x`` is computed; returns x."""
+        return jax.block_until_ready(x)
+
+
+@contextlib.contextmanager
+def span(name: str, meters: Optional[Meters] = None):
+    """Time a block (see module docstring).  ``meters`` overrides the
+    ambient registry; with neither, the Span still carries ``elapsed_s``."""
+    m = meters if meters is not None else current_meters()
+    sp = Span(name)
+    t0 = time.perf_counter()
+    try:
+        yield sp
+    finally:
+        sp.elapsed_s = time.perf_counter() - t0
+        if m is not None:
+            m.inc(f"time/{name}_s", sp.elapsed_s)
+            m.inc(f"time/{name}_n", 1)
+
+
+def annotate(name: str):
+    """Profiler trace annotation when available, nullcontext otherwise."""
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:
+        return contextlib.nullcontext()

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import bucket
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.obs.meters import current_meters
 
 WIRE_MODES = ("bucketed", "per_leaf")
 
@@ -66,9 +67,27 @@ class WireExchange:
             shapes, dtypes, bits=self.bits, block_for=self.block_for,
             scale_bytes=2 if self.scales_bf16 else 4)
 
+    # ------------------------------------------------------------ telemetry
+    def _record(self, hop_pairs, *, bytes_per_hop: int,
+                collectives_per_hop: int) -> None:
+        """Gauge the static wire facts into the ambient Meters (no-op when
+        none is installed).  Runs at jit TRACE time inside shard_map —
+        values are host ints from the static layout, and ``set`` keeps
+        retraces idempotent; only ``wire/traces`` counts re-executions."""
+        m = current_meters()
+        if m is None:
+            return
+        hops = len(hop_pairs)
+        m.set("wire/bytes_per_hop", bytes_per_hop)
+        m.set("wire/hops", hops)
+        m.set("wire/collectives_per_step", collectives_per_hop * hops)
+        m.inc("wire/traces")
+
     def bucketed(self, diffs, keys, wmat, hop_pairs, pp):
         layout = self.layout([d.shape for d in diffs],
                              [d.dtype for d in diffs])
+        self._record(hop_pairs, bytes_per_hop=layout.wire_bits // 8,
+                     collectives_per_hop=2)
         xbs, us = [], []
         for d, k, sl in zip(diffs, keys, layout.slots):
             xb = kops.blockwise_lastdim(d, block=sl.block)
@@ -84,6 +103,13 @@ class WireExchange:
 
     # ------------------------------------------------------------ per-leaf
     def per_leaf(self, diffs, keys, wmat, hop_pairs, pp):
+        # same bytes as bucketed (the bucket is a concatenation), but each
+        # leaf ships its own (codes, scales) pair per hop
+        self._record(hop_pairs,
+                     bytes_per_hop=self.layout(
+                         [d.shape for d in diffs],
+                         [d.dtype for d in diffs]).wire_bits // 8,
+                     collectives_per_hop=2 * len(diffs))
         wq: List = []
         qs: List = []
         bits = self.bits
@@ -120,6 +146,10 @@ class WireExchange:
     # ------------------------------------------------------------ identity
     def identity(self, diffs, wmat, hop_pairs, pp):
         """C = 0 wire path: raw leaves move, no quantization."""
+        self._record(hop_pairs,
+                     bytes_per_hop=sum(d.size * d.dtype.itemsize
+                                       for d in diffs),
+                     collectives_per_hop=len(diffs))
         wq: List = []
         for d in diffs:
             recvs = [pp(d, pr) for pr in hop_pairs]

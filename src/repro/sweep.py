@@ -83,7 +83,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import registry
+from repro import obs, registry
 from repro.core.compression import Compressor, QInf
 from repro.kernels import ops as kops
 from repro.netsim import engine as netsim_engine
@@ -576,6 +576,19 @@ class SweepRunner:
             meta=({"schedule": sched.name, "T_cycle": sched.T_cycle,
                    "faults": [f.name for f in self._template.faults]}
                   if sched is not None else {}))
+        # grid-level telemetry: netsim sweeps carry the exact per-point bit
+        # trajectories, so bits_total sums the whole grid's wire traffic
+        meters = obs.Meters()
+        meters.set("sweep/points", self.n_points)
+        meters.set("sweep/traces", self.traces)
+        bits_total = (float(metrics["bits"].sum())
+                      if "bits" in metrics else 0.0)
+        self.last_report = obs.build_report(
+            name=self.name, engine="sweep", steps=num_steps, total_s=wall,
+            bits_per_step=(bits_total / num_steps if num_steps else 0.0),
+            bits_total=bits_total, scope="system", meters=meters,
+            extra={"points": self.n_points, "traces": self.traces,
+                   "base_engine": self.engine})
         return final, result
 
     def point_state(self, state, i: int):

@@ -81,6 +81,37 @@ class TestAnalyticModels:
         n_act = cfg.param_count(active_only=True)
         assert n_act < 0.45 * n_all  # top-2 of 8 experts
 
+    def test_hbm_train_scales_with_state_copies(self):
+        # each extra Prox-LEAD state copy costs exactly one read + one
+        # write of the per-chip bf16 params, nothing else
+        from repro import configs
+        from repro.configs import shapes as shp
+        cfg = configs.get("yi-9b")
+        shape = shp.SHAPES["train_4k"]
+        b4 = roofline.analytic_hbm_bytes(cfg, shape, 8, 8, 4.0)
+        b6 = roofline.analytic_hbm_bytes(cfg, shape, 8, 8, 6.0)
+        per_chip_params = cfg.param_count() * 2.0 * 8 / 8
+        assert b6 - b4 == pytest.approx(2 * 2 * per_chip_params)
+
+    def test_hbm_train_total_conserved_across_chip_counts(self):
+        # per-chip traffic is an even split: chips x per-chip is invariant
+        from repro import configs
+        from repro.configs import shapes as shp
+        cfg = configs.get("yi-9b")
+        shape = shp.SHAPES["train_4k"]
+        b8 = roofline.analytic_hbm_bytes(cfg, shape, 8, 8, 4.0)
+        b16 = roofline.analytic_hbm_bytes(cfg, shape, 8, 16, 4.0)
+        assert 16 * b16 == pytest.approx(8 * b8)
+        assert b16 < b8
+
+    def test_hbm_decode_dominated_by_weights_and_cache(self):
+        from repro import configs
+        from repro.configs import shapes as shp
+        cfg = configs.get("yi-9b")
+        dec = roofline.analytic_hbm_bytes(
+            cfg, shp.SHAPES["decode_32k"], 1, 8, 0.0)
+        assert dec > cfg.param_count() * 2.0 / 8  # at least the weights
+
 
 @pytest.mark.slow
 class TestSmallMeshLowering:
@@ -473,4 +504,76 @@ class TestNeighborBackend:
         """
         r = _run_sub(code)
         assert "BITS_OK" in r.stdout and r.stdout.count("U8_OK") == 2, \
+            r.stdout + r.stderr[-2000:]
+
+
+@pytest.mark.slow
+class TestKernelRooflineGate:
+    """repro.obs.roofline_gate vs the exact accounting, on real meshes."""
+
+    def test_wire_roofline_matches_exact_accounting_both_meshes(self):
+        """The kernel roofline's wire bytes must equal (a) the static
+        BucketLayout, (b) netsim.metrics' bucketed/sharded payload
+        accounting, (c) TrainerRunner.bits_per_step, and (d) the bytes the
+        compiled HLO physically moves — on both (8,1) and (4,2) meshes.
+        If any of these ever drifts, the RunReport/roofline numbers stop
+        being trustworthy."""
+        code = """
+        import jax, jax.numpy as jnp, dataclasses, re
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import api, compat, configs, obs
+        from repro.configs import shapes as shp
+        from repro.optim import DecentralizedTrainer, TrainerConfig
+        from repro.launch import roofline
+        from repro.netsim import metrics as nmetrics
+        from repro.models.sharding import model_axis_size
+
+        cfg = configs.get("qwen3-1.7b").reduced(n_layers=1, d_model=64)
+        cfg = dataclasses.replace(cfg, dtype=jnp.bfloat16)
+        shape = shp.InputShape("t", 32, 8, "train")
+        CP = (r'=\\s*((?:\\([^)]*\\))|(?:[\\w\\[\\],.{}]+))\\s+'
+              r'collective-permute(?:-start)?\\(')
+        for meshshape, n in (((8, 1), 8), ((4, 2), 4)):
+            mesh = compat.make_mesh(meshshape, ("data", "model"))
+            tr = DecentralizedTrainer(cfg, TrainerConfig(
+                n_nodes=n, backend="neighbor", topology="ring", bits=2,
+                wire_mode="bucketed"), mesh=mesh)
+            state = tr.abstract_state()
+            leaves = jax.tree_util.tree_leaves(state.plead.X)
+            hops = len(tr.plan.hops)
+            per_edge = nmetrics.bucketed_payload_bits(tr, leaves)
+
+            # (a)+(b) roofline layout == exact payload accounting
+            layout, model = obs.trainer_wire_layout(tr, leaves)
+            assert model * layout.wire_bits == per_edge, meshshape
+            k = obs.kernel_roofline(layout, hops=hops)
+            assert k["wire"]["bytes_per_hop"] * 8 * model == per_edge
+            sr = obs.step_roofline(layout, hops=hops, measured_step_s=1.0)
+            assert sr["wire_bytes_per_hop"] * 8 == layout.wire_bits
+            assert sr["predicted_step_s"] == (
+                sr["predicted_kernel_s"] + sr["predicted_wire_s"])
+
+            # (c) the RunReport's bits accounting
+            runner = api.TrainerRunner(tr)
+            assert runner.bits_per_step(state) == hops * per_edge
+
+            # (d) the compiled HLO ships exactly those bytes per shard
+            batch = shp.train_input_specs(cfg, shape, n)
+            ns = lambda t_: jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), t_,
+                is_leaf=lambda x: isinstance(x, P))
+            with compat.set_mesh(mesh):
+                txt = jax.jit(tr.train_step,
+                    in_shardings=(ns(tr.state_specs(("data",))),
+                                  ns(tr.batch_specs(batch, ("data",))))
+                    ).lower(state, batch).compile().as_text()
+            u8 = [m.group(1) for m in re.finditer(CP, txt)
+                  if m.group(1).startswith("u8[")]
+            u8_bytes = sum(roofline._shape_bytes(c) for c in u8)
+            assert u8_bytes * model_axis_size(mesh) == hops * per_edge / 8, \\
+                (meshshape, u8_bytes)
+            print("ROOFLINE_OK", meshshape, int(per_edge))
+        """
+        r = _run_sub(code)
+        assert r.stdout.count("ROOFLINE_OK") == 2, \
             r.stdout + r.stderr[-2000:]

@@ -1,0 +1,396 @@
+"""repro.obs telemetry: meters/spans, RunReport emission per engine,
+kernel rooflines vs exact byte accounting, and the perf gate.
+
+Device-light by design: everything here runs on the 1-device test process
+(the conftest pins device count); the sharded-trainer byte-equalities on
+real (8,1)/(4,2) meshes live in tests/test_dryrun_small.py subprocesses.
+"""
+import copy
+import importlib.util
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, obs
+from repro.core import bucket
+from repro.launch.roofline import HBM_BW, LINK_BW
+from repro.netsim import metrics as nmetrics
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_perf_gate():
+    spec = importlib.util.spec_from_file_location(
+        "perf_gate", os.path.join(REPO, "tools", "perf_gate.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ===========================================================================
+# Meters + spans
+# ===========================================================================
+
+class TestMeters:
+    def test_inc_set_get(self):
+        m = obs.Meters()
+        m.inc("a", 2)
+        m.inc("a", 3)
+        m.set("b", 7)
+        m.set("b", 9)                       # gauge: idempotent re-set
+        assert m.get("a") == 5
+        assert m.get("b") == 9
+        assert m.get("missing", -1) == -1
+        assert m.as_dict() == {"a": 5, "b": 9}
+
+    def test_ambient_stack(self):
+        assert obs.current_meters() is None
+        outer, inner = obs.Meters(), obs.Meters()
+        with obs.using_meters(outer):
+            assert obs.current_meters() is outer
+            with obs.using_meters(inner):
+                assert obs.current_meters() is inner
+            assert obs.current_meters() is outer
+        assert obs.current_meters() is None
+
+    def test_thread_safety_of_inc(self):
+        m = obs.Meters()
+
+        def work():
+            for _ in range(1000):
+                m.inc("n")
+
+        ts = [threading.Thread(target=work) for _ in range(4)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert m.get("n") == 4000
+
+    def test_env_info_keys(self):
+        env = obs.env_info()
+        assert set(env) >= {"jax", "backend", "device_kind",
+                            "device_count", "cpu_count", "x64"}
+        assert env["jax"] == jax.__version__
+        assert env["device_count"] >= 1
+
+
+class TestSpan:
+    def test_span_records_time_and_count(self):
+        m = obs.Meters()
+        with obs.using_meters(m):
+            with obs.span("work") as sp:
+                x = sp.ready(jnp.ones(8) * 2)
+        assert float(x[0]) == 2.0
+        assert m.get("time/work_s") > 0
+        assert m.get("time/work_n") == 1
+        assert sp.elapsed_s == m.get("time/work_s")
+
+    def test_span_accumulates(self):
+        m = obs.Meters()
+        for _ in range(3):
+            with obs.span("loop", m):
+                pass
+        assert m.get("time/loop_n") == 3
+
+    def test_span_without_meters_is_harmless(self):
+        with obs.span("orphan") as sp:
+            pass
+        assert sp.elapsed_s >= 0
+
+    def test_annotate_is_context_manager(self):
+        with obs.annotate("probe"):
+            pass
+
+
+# ===========================================================================
+# RunReport emission per engine
+# ===========================================================================
+
+def _spec(engine: str, steps: int = 3) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        steps=steps, execution=api.ExecutionSpec(engine=engine))
+
+
+class TestRunReports:
+    def test_dense_report_bits_match_accounting(self):
+        r = api.build(_spec("dense"))
+        state, _ = r.run()
+        rep = r.last_report
+        assert rep is not None and rep.engine == "dense" and rep.steps == 3
+        # bits = per-edge payload (netsim.metrics accounting) x out-degree
+        per_edge = nmetrics.payload_bits_per_node(r.algo.compressor, r.X0)
+        W = np.abs(np.asarray(r.algo.mixer.W))
+        deg = ((W > 1e-12).sum() - (np.diag(W) > 1e-12).sum()) / W.shape[0]
+        assert rep.wire["bits_per_step"] == per_edge * deg
+        assert rep.wire["bits_total"] == rep.wire["bits_per_step"] * 3
+        # compute-vs-wire breakdown is self-consistent
+        t = rep.timing
+        assert t["total_s"] > 0
+        assert t["mean_step_s"] == pytest.approx(t["total_s"] / 3)
+        assert t["wire_model_s_per_step"] == pytest.approx(
+            rep.wire["bits_per_step"] / 8 / LINK_BW)
+        assert (t["compute_residual_s_per_step"]
+                + t["wire_model_s_per_step"] >= t["mean_step_s"] - 1e-12)
+
+    def test_netsim_report_matches_trajectory(self):
+        r = api.build(_spec("netsim"))
+        final, traj = r.run()
+        rep = r.last_report
+        assert rep.engine == "netsim" and rep.wire["scope"] == "system"
+        assert rep.wire["bits_total"] == traj.total_bits
+        assert rep.wire["bits_per_step"] == pytest.approx(
+            traj.total_bits / traj.steps)
+        # simulate()'s meter hooks landed in the ambient registry
+        assert rep.meters["netsim/bits_per_edge_per_round"] == \
+            traj.meta["bits_per_edge_per_round"]
+        assert rep.meters["time/netsim_scan_n"] == 1
+
+    def test_sweep_report_sums_grid_bits(self):
+        import dataclasses as dc
+        from repro.sweep import SweepRunner
+        base = _spec("netsim", steps=4)
+        pts = [dc.replace(base, seed=s) for s in (0, 1)]
+        sr = SweepRunner(pts)
+        _, res = sr.run()
+        rep = sr.last_report
+        assert rep.engine == "sweep"
+        assert rep.extra["points"] == 2 and rep.extra["traces"] == 1
+        assert rep.wire["bits_total"] == float(res.metrics["bits"].sum())
+
+    def test_trainer_dense_backend_bits_accounting(self):
+        # shape-only: bits_per_step works on the abstract state, no jit
+        from repro import configs
+        from repro.optim import DecentralizedTrainer, TrainerConfig
+        cfg = configs.get("qwen3-1.7b").reduced(n_layers=1, d_model=64)
+        tr = DecentralizedTrainer(cfg, TrainerConfig(n_nodes=4))
+        runner = api.TrainerRunner(tr)
+        state = tr.abstract_state()
+        per_edge = nmetrics.payload_bits_per_node(tr.compressor,
+                                                  state.plead.X)
+        W = np.abs(np.asarray(tr.mixer.W))
+        deg = ((W > 1e-12).sum() - (np.diag(W) > 1e-12).sum()) / W.shape[0]
+        assert runner.bits_per_step(state) == per_edge * deg
+
+    def test_report_json_roundtrip(self, tmp_path):
+        r = api.build(_spec("dense", steps=2))
+        r.run()
+        rep = r.last_report
+        assert obs.RunReport.from_json(rep.to_json()).to_dict() \
+            == rep.to_dict()
+        p = rep.save(tmp_path / "sub" / "report.json")
+        assert obs.RunReport.from_json(p).to_dict() == rep.to_dict()
+
+
+# ===========================================================================
+# WireExchange meter hooks (pure-jnp, pp = identity closure)
+# ===========================================================================
+
+class TestWireExchangeMeters:
+    def _exchange(self, mode: str):
+        from repro.optim.wire import WireExchange
+        we = WireExchange(bits=2, block=16)
+        diffs = [jnp.ones((1, 4, 32)), jnp.ones((1, 8))]
+        keys = list(jax.random.split(jax.random.key(0), len(diffs)))
+        hop_pairs = [[(0, 0)], [(0, 0)]]            # 2 hops, self-loops
+        wmat = np.full((3, 1), 1 / 3)
+        pp = lambda x, pr: x
+        m = obs.Meters()
+        with obs.using_meters(m):
+            if mode == "identity":
+                we.identity(diffs, wmat, hop_pairs, pp)
+            else:
+                getattr(we, mode)(diffs, keys, wmat, hop_pairs, pp)
+        return we, diffs, m
+
+    def test_bucketed_records_exact_layout_bytes(self):
+        we, diffs, m = self._exchange("bucketed")
+        layout = we.layout([d.shape for d in diffs],
+                           [d.dtype for d in diffs])
+        assert m.get("wire/bytes_per_hop") == layout.wire_bits // 8
+        assert m.get("wire/hops") == 2
+        assert m.get("wire/collectives_per_step") == 2 * 2
+        assert m.get("wire/traces") >= 1
+
+    def test_per_leaf_ships_same_bytes_more_collectives(self):
+        we, diffs, m = self._exchange("per_leaf")
+        layout = we.layout([d.shape for d in diffs],
+                           [d.dtype for d in diffs])
+        assert m.get("wire/bytes_per_hop") == layout.wire_bits // 8
+        assert m.get("wire/collectives_per_step") == 2 * len(diffs) * 2
+
+    def test_identity_records_raw_float_bytes(self):
+        _, diffs, m = self._exchange("identity")
+        raw = sum(d.size * d.dtype.itemsize for d in diffs)
+        assert m.get("wire/bytes_per_hop") == raw
+
+    def test_no_ambient_meters_is_free(self):
+        # must not raise nor leak state when no registry is installed
+        assert obs.current_meters() is None
+        from repro.optim.wire import WireExchange
+        we = WireExchange(bits=2, block=16)
+        diffs = [jnp.ones((1, 4, 32))]
+        keys = [jax.random.key(0)]
+        we.bucketed(diffs, keys, np.ones((2, 1)) / 2, [[(0, 0)]],
+                    lambda x, pr: x)
+
+
+# ===========================================================================
+# Kernel roofline vs exact accounting
+# ===========================================================================
+
+class TestKernelRoofline:
+    SHAPES = [(4, 100), (3, 7), (64,), (2, 5, 30)]
+
+    def _layout(self):
+        return bucket.compute_layout(
+            self.SHAPES, [jnp.float32] * len(self.SHAPES), bits=2)
+
+    def test_wire_bytes_equal_bucket_layout(self):
+        layout = self._layout()
+        k = obs.kernel_roofline(layout, hops=3)
+        assert k["wire"]["bytes_per_hop"] * 8 == layout.wire_bits
+
+    def test_wire_bytes_equal_per_leaf_qinf_accounting(self):
+        # the bucket is a concatenation of exactly the per-leaf payloads
+        layout = self._layout()
+        per_leaf = sum(
+            nmetrics.qinf_wire_bits(s, 2, bucket.default_quant_block(s))
+            for s in self.SHAPES)
+        assert layout.wire_bits == per_leaf
+        assert obs.kernel_roofline(layout)["wire"]["bytes_per_hop"] * 8 \
+            == per_leaf
+
+    def test_hbm_model_structure(self):
+        layout = self._layout()
+        elems = sum(g.rows * g.block for g in layout.groups)
+        wire_bytes = layout.codes_bytes + layout.scales_bytes
+        k = obs.kernel_roofline(layout, hops=2, receivers=1)
+        assert k["quantize_pack"]["hbm_bytes"] == 8 * elems + wire_bytes
+        assert k["unpack_dequant_mix"]["hbm_bytes"] == \
+            3 * wire_bytes + 8 * elems
+        assert k["quantize_pack"]["t_s"] == pytest.approx(
+            k["quantize_pack"]["hbm_bytes"] / HBM_BW)
+
+    def test_step_roofline_utilization(self):
+        layout = self._layout()
+        sr = obs.step_roofline(layout, hops=2, measured_step_s=1.0)
+        assert sr["predicted_step_s"] == pytest.approx(
+            sr["predicted_kernel_s"] + sr["predicted_wire_s"])
+        assert sr["utilization"] == pytest.approx(sr["predicted_step_s"])
+        assert "measured_step_s" not in obs.step_roofline(layout, hops=2)
+
+    def test_more_hops_more_wire_time(self):
+        layout = self._layout()
+        t1 = obs.step_roofline(layout, hops=1)["predicted_wire_s"]
+        t4 = obs.step_roofline(layout, hops=4)["predicted_wire_s"]
+        assert t4 == pytest.approx(4 * t1)
+
+
+# ===========================================================================
+# perf gate
+# ===========================================================================
+
+def _wire_snapshot(speedup=2.0, cp_bucketed=2, ok=True):
+    return {
+        "suite": "wire", "steps": 60,
+        "rows": [{"name": "ring/L=4", "topology": "ring", "hops": 1,
+                  "cp_per_leaf": 8, "cp_bucketed": cp_bucketed,
+                  "speedup": speedup}],
+        "checks": [{"claim": "bucketed faster", "ok": ok, "detail": ""}],
+    }
+
+
+class TestPerfGate:
+    def setup_method(self):
+        self.pg = _load_perf_gate()
+
+    def _hist(self, *snaps):
+        return {"suite": "wire", "records": list(snaps)}
+
+    def test_pass_on_matching_history(self):
+        f = self.pg.gate_suite("wire", _wire_snapshot(),
+                               self._hist(_wire_snapshot()), tol=0.5)
+        assert f and all(ok for _, ok, _ in f)
+
+    def test_injected_speedup_regression_fails_at_tol_zero(self):
+        cur, base = _wire_snapshot(speedup=1.99), _wire_snapshot(speedup=2.0)
+        bad = self.pg.gate_suite("wire", cur, self._hist(base), tol=0.0)
+        assert any(not ok for _, ok, _ in bad)
+        # ...but survives the documented walltime tolerance
+        good = self.pg.gate_suite("wire", cur, self._hist(base), tol=0.5)
+        assert all(ok for _, ok, _ in good)
+
+    def test_exact_collective_count_regression_fails_at_any_tol(self):
+        cur = _wire_snapshot(cp_bucketed=4)        # per-leaf crept back in
+        f = self.pg.gate_suite("wire", cur, self._hist(_wire_snapshot()),
+                               tol=1.0)
+        assert any("cp_bucketed" in claim for claim, ok, _ in f if not ok)
+
+    def test_snapshot_claim_failure_fails(self):
+        f = self.pg.gate_suite("wire", _wire_snapshot(ok=False),
+                               self._hist(_wire_snapshot()), tol=0.5)
+        assert any(not ok for _, ok, _ in f)
+
+    def test_missing_row_fails(self):
+        cur = _wire_snapshot()
+        cur["rows"] = []
+        f = self.pg.gate_suite("wire", cur, self._hist(_wire_snapshot()),
+                               tol=0.5)
+        assert any(not ok for _, ok, _ in f)
+
+    def test_no_history_passes_with_note(self):
+        f = self.pg.gate_suite("wire", _wire_snapshot(),
+                               self._hist(), tol=0.0)
+        assert all(ok for _, ok, _ in f)
+
+    def test_ratio_floor_uses_best_of_history(self):
+        hist = self._hist(_wire_snapshot(speedup=1.2),
+                          _wire_snapshot(speedup=2.4))
+        f = self.pg.gate_suite("wire", _wire_snapshot(speedup=1.3),
+                               hist, tol=0.5)
+        assert all(ok for _, ok, _ in f)       # 1.3 >= 0.5 * 2.4
+        f0 = self.pg.gate_suite("wire", _wire_snapshot(speedup=1.1),
+                                hist, tol=0.5)
+        assert any(not ok for _, ok, _ in f0)  # 1.1 < 1.2
+
+    def test_sweep_parity_flip_fails(self):
+        snap = {"suite": "sweep", "steps": 60,
+                "rows": [{"mode": "sweep-map", "traces": 1,
+                          "speedup_vs_serial": 3.0,
+                          "parity_vs_serial": True}],
+                "checks": []}
+        cur = copy.deepcopy(snap)
+        cur["rows"][0]["parity_vs_serial"] = False
+        f = self.pg.gate_suite("sweep", cur,
+                               {"suite": "sweep", "records": [snap]},
+                               tol=1.0)
+        assert any("parity" in claim for claim, ok, _ in f if not ok)
+
+    def test_update_appends_history(self, tmp_path):
+        p = tmp_path / "wire.json"
+        self.pg.append_history(p, "wire", _wire_snapshot())
+        self.pg.append_history(p, "wire", _wire_snapshot(speedup=2.5))
+        hist = json.loads(p.read_text())
+        assert len(hist["records"]) == 2
+        assert all("date" in r for r in hist["records"])
+
+    def test_committed_history_gates_green(self):
+        """The repo's own snapshots must pass against the repo's own
+        committed history — the `make ci` configuration."""
+        hist_dir = os.path.join(REPO, "benchmarks", "history")
+        if not os.path.isdir(hist_dir):
+            pytest.skip("no committed history yet")
+        for suite in self.pg.SUITES:
+            snap_path = os.path.join(REPO, f"BENCH_{suite}.json")
+            hist_path = os.path.join(hist_dir, f"{suite}.json")
+            if not (os.path.exists(snap_path) and os.path.exists(hist_path)):
+                pytest.skip(f"no snapshot/history for {suite}")
+            current = json.loads(open(snap_path).read())
+            hist = json.loads(open(hist_path).read())
+            findings = self.pg.gate_suite(suite, current, hist, tol=0.5)
+            bad = [(c, d) for c, ok, d in findings if not ok]
+            assert not bad, bad

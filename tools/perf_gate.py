@@ -1,0 +1,210 @@
+#!/usr/bin/env python
+"""perf-gate: fail when a BENCH_*.json snapshot regresses vs history.
+
+``benchmarks.run --smoke`` (part of ``make ci``) writes one snapshot per
+suite at the repo root (BENCH_comm.json / BENCH_netsim.json /
+BENCH_wire.json / BENCH_sweep.json).  This gate compares those snapshots
+against the committed history under ``benchmarks/history/<suite>.json``
+and exits nonzero on any regression:
+
+* **snapshot checks** — every ``checks[].ok`` claim in the fresh snapshot
+  must already be true (the bench suites' own claim validation);
+* **exact metrics** — deterministic accounting (payload bit counts,
+  collective-permute counts, gossip hops, sweep trace counts) must match
+  the LATEST history record bit-for-bit, at any tolerance.  These numbers
+  are derived from static layouts and HLO parses, so any drift is a real
+  behavior change — commit a new baseline with ``--update`` if it is
+  intentional;
+* **ratio metrics** — walltime-derived ratios (wire speedup, sweep
+  speedup-vs-serial) must stay >= ``(1 - tol) x`` the BEST value in
+  history.  Walltime jitters run to run; the tolerance (``make
+  PERF_TOL=...``, default 0.5) absorbs that while still catching a path
+  that stops being faster at all;
+* **boolean claims** — per-row flags (sweep bit-for-bit parity) may never
+  flip from true to false.
+
+Usage::
+
+  python tools/perf_gate.py                      # gate vs history
+  python tools/perf_gate.py --update             # append snapshots to history
+  python tools/perf_gate.py --tol 0 --suites wire
+
+No history for a suite (or no record at the snapshot's step count) is a
+pass-with-note: the first ``--update`` creates the baseline.  The module
+is import-safe for tests: ``gate_suite(suite, current, history, tol)``
+returns ``(claim, ok, detail)`` findings without touching the filesystem.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+from typing import Dict, List, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+SUITES = ("comm", "netsim", "wire", "sweep")
+
+# which row field identifies a row across snapshots
+KEY_FIELD = {"comm": "name", "netsim": "name", "wire": "name",
+             "sweep": "mode"}
+
+# deterministic accounting: must equal the latest history record exactly
+EXACT = {
+    "comm": ("bits_per_iter",),
+    "netsim": ("total_mbits_on_wire",),
+    "wire": ("hops", "cp_bucketed", "cp_per_leaf"),
+    "sweep": ("traces",),
+}
+
+# walltime ratios: current >= (1 - tol) x best in history
+RATIO = {
+    "wire": ("speedup",),
+    "sweep": ("speedup_vs_serial",),
+}
+
+# per-row boolean claims that may never flip to false
+BOOL = {"sweep": ("parity_vs_serial",)}
+
+Finding = Tuple[str, bool, str]
+
+
+def _rows_by_key(suite: str, rows) -> Dict[str, dict]:
+    field = KEY_FIELD[suite]
+    return {str(r.get(field)): r for r in rows}
+
+
+def gate_suite(suite: str, current: dict, history: dict,
+               tol: float) -> List[Finding]:
+    """Compare one fresh snapshot against one suite's history.
+
+    ``current`` is a BENCH_<suite>.json dict; ``history`` is
+    {"suite": ..., "records": [snapshot, ...]} (oldest first).  Returns
+    (claim, ok, detail) findings; the run regresses iff any ok is False.
+    """
+    findings: List[Finding] = []
+    for c in current.get("checks", []):
+        if not c.get("ok"):
+            findings.append((f"{suite}: snapshot claim failed: "
+                             f"{c.get('claim')}", False,
+                             str(c.get("detail", ""))))
+    records = [r for r in history.get("records", [])
+               if r.get("steps") == current.get("steps")]
+    if not records:
+        findings.append((f"{suite}: no history at steps="
+                         f"{current.get('steps')}", True,
+                         "baseline record created by --update"))
+        return findings
+
+    cur_rows = _rows_by_key(suite, current.get("rows", []))
+
+    # exact + boolean vs the LATEST record (intentional changes re-baseline
+    # via --update); ratio floor vs the BEST value anywhere in history
+    latest = _rows_by_key(suite, records[-1].get("rows", []))
+    for key, base_row in latest.items():
+        cur = cur_rows.get(key)
+        if cur is None:
+            findings.append((f"{suite}/{key}: row missing from snapshot",
+                             False, "present in history"))
+            continue
+        for mname in EXACT.get(suite, ()):
+            if mname in base_row and cur.get(mname) != base_row[mname]:
+                findings.append(
+                    (f"{suite}/{key}: exact metric '{mname}' drifted",
+                     False, f"{base_row[mname]!r} -> {cur.get(mname)!r}"))
+        for mname in BOOL.get(suite, ()):
+            if base_row.get(mname) and not cur.get(mname):
+                findings.append(
+                    (f"{suite}/{key}: claim '{mname}' flipped false",
+                     False, "was true in history"))
+
+    best: Dict[Tuple[str, str], float] = {}
+    for rec in records:
+        for key, row in _rows_by_key(suite, rec.get("rows", [])).items():
+            for mname in RATIO.get(suite, ()):
+                if mname in row:
+                    k = (key, mname)
+                    best[k] = max(best.get(k, float("-inf")),
+                                  float(row[mname]))
+    for (key, mname), base in sorted(best.items()):
+        if key not in cur_rows:
+            continue                     # already reported missing above
+        cur_v = float(cur_rows[key].get(mname, float("-inf")))
+        floor = (1.0 - tol) * base
+        findings.append(
+            (f"{suite}/{key}: '{mname}' within tolerance of history",
+             cur_v >= floor,
+             f"current {cur_v:.3g} vs floor {floor:.3g} "
+             f"(best {base:.3g}, tol {tol:g})"))
+    return findings
+
+
+def load_history(path: pathlib.Path, suite: str) -> dict:
+    if path.exists():
+        return json.loads(path.read_text())
+    return {"suite": suite, "records": []}
+
+
+def append_history(path: pathlib.Path, suite: str, snapshot: dict) -> None:
+    hist = load_history(path, suite)
+    rec = dict(snapshot)
+    rec.setdefault("date", time.strftime("%Y-%m-%dT%H:%M:%S"))
+    hist["records"].append(rec)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(hist, indent=1, default=str))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=str(ROOT),
+                    help="repo root holding the BENCH_*.json snapshots")
+    ap.add_argument("--history", default=None,
+                    help="history dir (default <root>/benchmarks/history)")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="ratio-metric tolerance (see module docstring)")
+    ap.add_argument("--suites", default=",".join(SUITES),
+                    help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--update", action="store_true",
+                    help="append the current snapshots to history")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root)
+    hist_dir = (pathlib.Path(args.history) if args.history
+                else root / "benchmarks" / "history")
+
+    n_fail = 0
+    n_checked = 0
+    for suite in args.suites.split(","):
+        suite = suite.strip()
+        if suite not in SUITES:
+            print(f"[perf-gate] FAIL unknown suite {suite!r}")
+            return 1
+        snap_path = root / f"BENCH_{suite}.json"
+        if not snap_path.exists():
+            print(f"[perf-gate] FAIL missing snapshot {snap_path.name} "
+                  f"(run `make ci` / `benchmarks.run --smoke` first)")
+            n_fail += 1
+            continue
+        current = json.loads(snap_path.read_text())
+        hist_path = hist_dir / f"{suite}.json"
+        findings = gate_suite(suite, current,
+                              load_history(hist_path, suite), args.tol)
+        for claim, ok, detail in findings:
+            mark = "PASS" if ok else "FAIL"
+            n_fail += not ok
+            n_checked += 1
+            print(f"[perf-gate] {mark} {claim}"
+                  + (f"   [{detail}]" if detail else ""))
+        if args.update:
+            append_history(hist_path, suite, current)
+            print(f"[perf-gate] history += {snap_path.name} -> "
+                  f"{hist_path.relative_to(root)}")
+    verdict = "FAIL" if n_fail else "OK"
+    print(f"[perf-gate] {verdict}: {n_checked - n_fail}/{n_checked} "
+          f"gated claims hold")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
