@@ -10,7 +10,7 @@ PY ?= python
 PERF_TOL ?= 0.5
 
 .PHONY: test bench-smoke lint ci spec-golden docs-check perf-gate \
-	perf-baseline
+	perf-baseline check check-baseline
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -26,6 +26,18 @@ spec-golden:
 docs-check:
 	$(PY) tools/docs_check.py docs README.md
 
+# static-analysis gate: the AST policy linter (gated against the
+# tools/lint_baseline.json ratchet — may shrink, never grow) plus the
+# lowered-HLO contract audit over every golden spec (u8 payloads,
+# 2 x hops collectives, byte-exact bucket accounting; lowers, never runs)
+check:
+	PYTHONPATH=src $(PY) -m repro.check
+
+# ratchet tools/lint_baseline.json DOWN after fixing violations
+# (new or grown buckets are refused — fix the code or add a pragma)
+check-baseline:
+	PYTHONPATH=src $(PY) -m repro.check --update-baseline
+
 # perf gate: compare the fresh BENCH_*.json smoke snapshots against the
 # committed history under benchmarks/history/ (tolerance: PERF_TOL above)
 perf-gate:
@@ -36,14 +48,14 @@ perf-gate:
 perf-baseline:
 	$(PY) tools/perf_gate.py --tol $(PERF_TOL) --update
 
-# full PR gate: tier-1 + spec goldens + docs references + benchmark smoke
+# full PR gate: tier-1 + spec goldens + docs references + static analysis
 # (emits BENCH_netsim.json / BENCH_comm.json / BENCH_wire.json /
 # BENCH_sweep.json at the repo root so the bench trajectory accumulates;
 # the netsim suite drives grouped one-jit sweeps through ExperimentSpec,
 # the wire suite measures bucketed vs per-leaf gossip in an 8-device
 # subprocess, the sweep suite gates one-jit-vs-serial parity + speedup)
 # + perf-gate: the fresh snapshots must not regress vs benchmarks/history/
-ci: test spec-golden docs-check
+ci: test spec-golden docs-check check
 	PYTHONPATH=src:. $(PY) -m benchmarks.run --smoke
 	$(PY) tools/perf_gate.py --tol $(PERF_TOL)
 
@@ -51,6 +63,7 @@ ci: test spec-golden docs-check
 bench-smoke:
 	PYTHONPATH=src:. $(PY) -m benchmarks.bench_netsim --steps 60 --quick
 
-# syntax gate (no extra deps in the container)
+# syntax gate (no extra deps in the container) + the AST policy linter
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
+	PYTHONPATH=src $(PY) -m repro.check --lint-only

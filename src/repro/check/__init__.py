@@ -1,0 +1,22 @@
+"""repro.check — static analysis that proves the repo's invariants.
+
+Two layers (see docs/ARCHITECTURE.md "Static analysis"):
+
+* **policy linter** (:mod:`repro.check.lint` + :mod:`repro.check.rules`) —
+  AST rules over ``src/ tests/ benchmarks/ examples/`` with a committed
+  ratchet baseline (``tools/lint_baseline.json``) and
+  ``# repro: allow(<rule>)`` pragmas;
+* **lowered-contract auditor** (:mod:`repro.check.contracts`) — lowers
+  every golden spec's step without executing it and asserts the wire
+  contracts (u8 payloads, 2 x hops collectives, byte-exact bucket
+  accounting, no f64, no host callbacks) against the compiled HLO.
+
+CLI: ``python -m repro.check`` (= ``make check``, part of ``make ci``).
+
+This ``__init__`` stays import-light on purpose: the contracts side pulls
+in jax lazily so ``--lint-only`` runs (and the lint unit tests) never pay
+for a jax import.
+"""
+from repro.check.base import Finding, ParsedFile  # noqa: F401
+from repro.check.lint import (  # noqa: F401
+    gate, load_baseline, run_lint, shrink_baseline)

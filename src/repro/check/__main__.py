@@ -1,0 +1,148 @@
+"""``python -m repro.check`` — the static-analysis gate (= ``make check``).
+
+Default run = both layers: the AST policy linter gated against
+``tools/lint_baseline.json``, then the golden-spec contract audit in ONE
+fresh subprocess (host-platform device count forced to 8 so trainer specs
+realize their meshes; the parent process never imports jax).  Output is
+``[check] PASS/FAIL claim [detail]`` lines in the ``tools/perf_gate.py``
+mold, nonzero exit on any failure.
+
+Flags::
+
+  --lint-only / --contracts-only   run one layer
+  --specs DIR                      golden-spec dir (default tests/golden_specs)
+  --json                           machine-readable findings on stdout
+  --update-baseline                ratchet tools/lint_baseline.json DOWN
+                                   (new/grown buckets are refused, exit 1)
+  --contracts-sub                  (internal) in-process contract audit,
+                                   JSON on stdout — the child end of the
+                                   subprocess the default run spawns
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+from typing import List, Tuple
+
+from repro.check import lint as lint_mod
+
+GateFinding = Tuple[str, bool, str]
+
+_SUB_MARK = "CHECK_CONTRACTS_JSON:"
+
+
+def _repo_root() -> pathlib.Path:
+    # src/repro/check/__main__.py -> repo root
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def _run_contracts_sub(root: pathlib.Path, specs: pathlib.Path,
+                       only: List[str]) -> List[GateFinding]:
+    """Spawn the contract audit in a fresh process: x64 stays off (the
+    sharded path must not need it) and 8 host devices are forced so the
+    (8,1)/(4,2) trainer meshes are realizable on any machine."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+    src = str(root / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "repro.check", "--contracts-sub",
+           "--root", str(root), "--specs", str(specs)]
+    for stem in only:
+        cmd += ["--only", stem]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    for line in r.stdout.splitlines():
+        if line.startswith(_SUB_MARK):
+            return [tuple(f) for f in json.loads(line[len(_SUB_MARK):])]
+    return [("contracts: audit subprocess produced no findings", False,
+             (r.stderr or r.stdout)[-400:])]
+
+
+def _print_findings(findings: List[GateFinding]) -> int:
+    n_fail = 0
+    for claim, ok, detail in findings:
+        mark = "PASS" if ok else "FAIL"
+        n_fail += not ok
+        print(f"[check] {mark} {claim}" + (f"   [{detail}]" if detail
+                                           else ""))
+    return n_fail
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=str(_repo_root()))
+    ap.add_argument("--specs", default=None,
+                    help="golden-spec dir (default <root>/tests/"
+                         "golden_specs)")
+    ap.add_argument("--baseline", default=None,
+                    help="lint baseline (default <root>/"
+                         + lint_mod.BASELINE_PATH + ")")
+    ap.add_argument("--only", action="append", default=[],
+                    help="restrict the contract audit to these spec stems")
+    ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--contracts-only", action="store_true")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--contracts-sub", action="store_true",
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.root)
+    specs = pathlib.Path(args.specs) if args.specs \
+        else root / "tests" / "golden_specs"
+    baseline_path = pathlib.Path(args.baseline) if args.baseline \
+        else root / lint_mod.BASELINE_PATH
+
+    if args.contracts_sub:                       # child end: in-process
+        from repro.check import contracts
+        findings = contracts.audit_spec_dir(specs, only=args.only or None)
+        print(_SUB_MARK + json.dumps([list(f) for f in findings]))
+        return 0
+
+    payload: dict = {}
+    gates: List[GateFinding] = []
+
+    if not args.contracts_only:
+        findings = lint_mod.run_lint(root)
+        baseline = lint_mod.load_baseline(baseline_path)
+        if args.update_baseline:
+            new, refused = lint_mod.shrink_baseline(baseline, findings)
+            if new != baseline:
+                baseline_path.write_text(json.dumps(new, indent=1,
+                                                    sort_keys=True) + "\n")
+                print(f"[check] baseline -> {baseline_path} "
+                      f"({len(baseline)} -> {len(new)} buckets)")
+            for key in refused:
+                print(f"[check] FAIL baseline refuses to grow: {key} "
+                      f"(fix the violation or add a pragma)")
+            return 1 if refused else 0
+        lint_gates, offenders = lint_mod.gate(findings, baseline)
+        gates.extend(lint_gates)
+        payload["lint"] = [f.as_dict() for f in findings]
+        payload["lint_offenders"] = [f.as_dict() for f in offenders]
+
+    if not args.lint_only:
+        contract_gates = _run_contracts_sub(root, specs, args.only)
+        gates.extend(contract_gates)
+        payload["contracts"] = [list(g) for g in contract_gates]
+
+    payload["gates"] = [list(g) for g in gates]
+    if args.as_json:
+        print(json.dumps(payload, indent=1))
+        n_fail = sum(1 for _, ok, _ in gates if not ok)
+    else:
+        n_fail = _print_findings(gates)
+        verdict = "FAIL" if n_fail else "OK"
+        print(f"[check] {verdict}: {len(gates) - n_fail}/{len(gates)} "
+              f"checks hold")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

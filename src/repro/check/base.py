@@ -1,0 +1,121 @@
+"""Shared vocabulary of the ``repro.check`` static-analysis layer.
+
+A :class:`Finding` is one diagnostic — ``rule`` id, repo-relative ``path``,
+1-based ``line``, human message — the unit both the lint baseline
+(``tools/lint_baseline.json``, keyed per ``rule:path``) and the ``--json``
+CLI output count and serialize.
+
+Deliberate exceptions are documented in source with a pragma, either on
+the offending line or — when the line is already full — as a comment-only
+line directly above it::
+
+    q = QInf(...)   # repro: allow(registry-only-construction)
+
+    # repro: allow(registry-only-construction) — traced op-exact twin
+    q = QInf(**registry.kwargs_subset("compressor", "qinf", c.params))
+
+:func:`pragma_lines` extracts the per-line allow sets from source text;
+:func:`apply_pragmas` drops the findings they cover.  A pragma names the
+rule it silences (comma-separated for several), so every exception is
+greppable and reviewed — unlike a baseline entry, which merely grandfathers
+history until the ratchet retires it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Protocol, Sequence, Set
+
+PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\(([^)]*)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: ``rule`` at ``path:line`` with a message."""
+    rule: str
+    path: str                    # repo-relative, posix separators
+    line: int
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Baseline bucket: violations are counted per (rule, file)."""
+        return f"{self.rule}:{self.path}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class Rule(Protocol):
+    """Per-file rule: sees one parsed module at a time."""
+    rule_id: str
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> List[Finding]: ...
+
+
+class TreeRule(Protocol):
+    """Whole-tree rule: sees every parsed module at once (import graphs,
+    registration maps).  ``files`` maps repo-relative path -> (tree, source).
+    """
+    rule_id: str
+
+    def check_tree(self, files: Dict[str, "ParsedFile"]) -> List[Finding]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ParsedFile:
+    """One lint input: parsed AST plus the raw source it came from."""
+    path: str                    # repo-relative
+    tree: ast.Module
+    source: str
+
+
+def pragma_lines(source: str) -> Dict[int, Set[str]]:
+    """{1-based line: {rule ids allowed on that line}} from the source.
+
+    A pragma on a comment-only line also covers the following line (the
+    allow-next-line form for statements too long to share a line with the
+    44-char pragma)."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = PRAGMA_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        out.setdefault(i, set()).update(rules)
+        if text.lstrip().startswith("#"):
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+def apply_pragmas(findings: Sequence[Finding],
+                  sources: Dict[str, str]) -> List[Finding]:
+    """Drop findings whose line carries ``# repro: allow(<their rule>)``."""
+    cache: Dict[str, Dict[int, Set[str]]] = {}
+    kept = []
+    for f in findings:
+        src = sources.get(f.path)
+        if src is not None:
+            if f.path not in cache:
+                cache[f.path] = pragma_lines(src)
+            if f.rule in cache[f.path].get(f.line, ()):
+                continue
+        kept.append(f)
+    return kept
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``a.b.c`` for a Name/Attribute chain, '' for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""

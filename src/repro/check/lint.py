@@ -1,0 +1,149 @@
+"""The AST policy linter: walk the tree, apply rules, gate vs a baseline.
+
+:func:`run_lint` parses every ``*.py`` under ``src/ tests/ benchmarks/
+examples/`` (relative to ``root``), runs the per-file and whole-tree rules
+from :mod:`repro.check.rules`, and drops findings covered by a same-line
+``# repro: allow(<rule>)`` pragma.
+
+The baseline (``tools/lint_baseline.json``) is a ratchet in the
+``tools/perf_gate.py`` mold: it maps ``"<rule>:<path>" -> count`` for
+violations that predate the gate.  :func:`gate` fails only when a bucket
+EXCEEDS its baselined count — so the gate starts green on the committed
+tree and any new violation anywhere fails CI — and
+:func:`shrink_baseline` refreshes the file downward only: counts may
+shrink or disappear as violations are fixed, but a grown or new bucket is
+refused (fix the code or add a pragma, don't re-grandfather).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.check.base import Finding, ParsedFile, apply_pragmas
+
+LINT_DIRS = ("src", "tests", "benchmarks", "examples")
+DOC_GLOBS = ("docs/*.md", "README.md")
+BASELINE_PATH = "tools/lint_baseline.json"
+
+GateFinding = Tuple[str, bool, str]          # (claim, ok, detail)
+
+
+def iter_py_files(root: pathlib.Path) -> List[pathlib.Path]:
+    out: List[pathlib.Path] = []
+    for d in LINT_DIRS:
+        base = root / d
+        if base.is_dir():
+            out.extend(sorted(base.rglob("*.py")))
+    return out
+
+
+def parse_tree(root: pathlib.Path) -> Dict[str, ParsedFile]:
+    """{repo-relative posix path: ParsedFile} for every lintable module.
+    Syntactically broken files are skipped — ``make lint``'s compileall
+    half owns syntax errors."""
+    files: Dict[str, ParsedFile] = {}
+    for p in iter_py_files(root):
+        rel = p.relative_to(root).as_posix()
+        try:
+            source = p.read_text()
+            tree = ast.parse(source, filename=rel)
+        except (SyntaxError, UnicodeDecodeError):
+            continue
+        files[rel] = ParsedFile(rel, tree, source)
+    return files
+
+
+def doc_texts(root: pathlib.Path) -> List[str]:
+    out = []
+    for pattern in DOC_GLOBS:
+        for p in sorted(root.glob(pattern)):
+            out.append(p.read_text())
+    return out
+
+
+def run_lint(root: pathlib.Path, *,
+             files: Optional[Dict[str, ParsedFile]] = None) -> List[Finding]:
+    """All post-pragma findings for the tree under ``root``, sorted."""
+    from repro.check.rules import default_rules
+    if files is None:
+        files = parse_tree(root)
+    per_file, tree_rules = default_rules(doc_texts(root))
+    findings: List[Finding] = []
+    for path in sorted(files):
+        pf = files[path]
+        for rule in per_file:
+            findings.extend(rule.check(path, pf.tree, pf.source))
+    for rule in tree_rules:
+        findings.extend(rule.check_tree(files))
+    sources = {path: pf.source for path, pf in files.items()}
+    findings = apply_pragmas(findings, sources)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+# --- baseline ratchet ------------------------------------------------------
+
+def counts_of(findings: Iterable[Finding]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for f in findings:
+        out[f.key] = out.get(f.key, 0) + 1
+    return out
+
+
+def load_baseline(path: pathlib.Path) -> Dict[str, int]:
+    if path.exists():
+        return {str(k): int(v)
+                for k, v in json.loads(path.read_text()).items()}
+    return {}
+
+
+def gate(findings: List[Finding],
+         baseline: Dict[str, int]) -> Tuple[List[GateFinding],
+                                            List[Finding]]:
+    """(gate findings, the individual violations that exceed baseline).
+
+    Per (rule, file) bucket: ok iff ``current <= baselined``; the excess
+    findings (last by line number) are returned for display.  A fully
+    fixed bucket is a pass — the stale baseline entry is retired by
+    ``shrink_baseline`` — and never re-grants headroom to new code."""
+    current = counts_of(findings)
+    gates: List[GateFinding] = []
+    offenders: List[Finding] = []
+    for key in sorted(set(current) | set(baseline)):
+        cur, base = current.get(key, 0), baseline.get(key, 0)
+        if cur > base:
+            over = [f for f in findings if f.key == key][base:]
+            offenders.extend(over)
+            gates.append((f"lint {key}: {cur} violation(s) vs "
+                          f"{base} baselined", False,
+                          "; ".join(str(f) for f in over[:3])))
+        elif base:
+            note = (f"{cur}/{base} grandfathered" if cur else
+                    "fixed — shrink the baseline")
+            gates.append((f"lint {key}: within baseline", True, note))
+    if not gates:
+        gates.append(("lint: tree is clean (no baseline needed)", True, ""))
+    return gates, offenders
+
+
+def shrink_baseline(old: Dict[str, int],
+                    findings: List[Finding]) -> Tuple[Dict[str, int],
+                                                      List[str]]:
+    """Ratchet: (new baseline, keys that REFUSED to update).
+
+    New counts are ``min(old, current)`` and zero-count keys are dropped;
+    a key that is new or grew vs ``old`` is returned in the refusal list
+    unchanged — ``--update-baseline`` never grandfathers fresh debt."""
+    current = counts_of(findings)
+    new: Dict[str, int] = {}
+    refused: List[str] = []
+    for key, cur in sorted(current.items()):
+        base = old.get(key, 0)
+        if cur > base:
+            refused.append(key)
+            if base:
+                new[key] = base
+        else:
+            new[key] = cur
+    return {k: v for k, v in new.items() if v > 0}, refused

@@ -1,0 +1,20 @@
+"""The policy rules ``repro.check`` lints (see docs/ARCHITECTURE.md for
+the rule table: id, policy source, rationale, pragma syntax)."""
+from __future__ import annotations
+
+from typing import Iterable, List, Tuple
+
+from repro.check.rules.compat_only import CompatOnlyRule          # noqa: F401
+from repro.check.rules.dead_module import DeadModuleRule          # noqa: F401
+from repro.check.rules.registry_only import RegistryOnlyRule      # noqa: F401
+from repro.check.rules.wallclock import WallclockRule             # noqa: F401
+
+RULE_IDS = ("compat-only", "no-wallclock-in-library",
+            "registry-only-construction", "no-dead-module")
+
+
+def default_rules(doc_texts: Iterable[str] = ()) -> Tuple[List, List]:
+    """(per-file rules, whole-tree rules) in the canonical order."""
+    per_file = [CompatOnlyRule(), WallclockRule()]
+    tree = [RegistryOnlyRule(), DeadModuleRule(doc_texts)]
+    return per_file, tree

@@ -1,0 +1,82 @@
+"""compat-only: experimental / mesh-global jax APIs go through repro.compat.
+
+``repro/compat.py`` exists so the repo tracks jax's moving sharding surface
+(``shard_map``'s ``jax.experimental`` -> ``jax`` migration, ``set_mesh`` vs
+``sharding.use_mesh``) in ONE file.  Everything else must call
+``compat.make_mesh`` / ``compat.set_mesh`` / ``compat.shard_map``; a direct
+``jax.shard_map`` call works on today's pin and breaks on the next one.
+
+Flagged outside ``src/repro/compat.py``:
+
+* any ``jax.experimental`` import or attribute chain — except
+  ``jax.experimental.pallas`` (+ its submodules) inside
+  ``src/repro/kernels/``, which is pallas' only home;
+* ``jax.shard_map`` / ``jax.set_mesh`` / ``jax.make_mesh`` attribute use or
+  ``from jax import shard_map``-style imports.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.check.base import Finding, dotted_name
+
+_BANNED_JAX_ATTRS = {"shard_map", "set_mesh", "make_mesh"}
+_PALLAS_PREFIX = "jax.experimental.pallas"
+
+
+class CompatOnlyRule:
+    rule_id = "compat-only"
+
+    def _exempt(self, path: str) -> bool:
+        return path.endswith("repro/compat.py") or path == "compat.py"
+
+    def _pallas_ok(self, dotted: str, path: str) -> bool:
+        return (dotted == _PALLAS_PREFIX
+                or dotted.startswith(_PALLAS_PREFIX + ".")) \
+            and "kernels/" in path
+
+    def check(self, path: str, tree: ast.AST, source: str) -> List[Finding]:
+        if self._exempt(path):
+            return []
+        out: List[Finding] = []
+
+        def flag(node: ast.AST, what: str) -> None:
+            out.append(Finding(self.rule_id, path, node.lineno,
+                               f"{what} — route through repro.compat"))
+
+        inner = set()              # value-children of a visited Attribute:
+        for node in ast.walk(tree):  # only OUTERMOST chains are judged
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.startswith("jax.experimental") \
+                            and not self._pallas_ok(alias.name, path):
+                        flag(node, f"import {alias.name}")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.startswith("jax.experimental"):
+                    for alias in node.names:
+                        full = f"{mod}.{alias.name}"
+                        if not (self._pallas_ok(mod, path)
+                                or self._pallas_ok(full, path)):
+                            flag(node, f"from {mod} import {alias.name}")
+                elif mod == "jax":
+                    for alias in node.names:
+                        if alias.name in _BANNED_JAX_ATTRS:
+                            flag(node, f"from jax import {alias.name}")
+            elif isinstance(node, ast.Attribute):
+                v = node.value
+                while isinstance(v, ast.Attribute):
+                    inner.add(id(v))
+                    v = v.value
+                if id(node) in inner:
+                    continue
+                dotted = dotted_name(node)
+                if not dotted.startswith("jax."):
+                    continue
+                if dotted.split(".")[1] == "experimental":
+                    if not self._pallas_ok(dotted, path):
+                        flag(node, dotted)
+                elif dotted.split(".")[1] in _BANNED_JAX_ATTRS:
+                    flag(node, dotted)
+        return out

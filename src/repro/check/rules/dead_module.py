@@ -1,0 +1,149 @@
+"""no-dead-module: every ``src/repro`` module earns its keep.
+
+A module nothing reaches is worse than deleted code: it still imports, so
+it silently rots against the moving APIs around it (the seed's
+``launch/roofline.py`` sat exactly there until PR 6/7 re-homed it under
+``repro.obs``).  This rule reconstructs reachability statically:
+
+**roots**
+
+* entry points — modules with an ``if __name__ == "__main__"`` guard or
+  named ``__main__.py``;
+* registries — modules that register a component (``@register_*`` /
+  ``registry.register*(...)``): build-by-name reaches them through
+  ``repro.registry`` even when nothing imports them by path;
+* documented surface — modules whose path appears in ``docs/*.md`` or
+  ``README.md`` (the docs gate keeps those references resolving);
+* external importers — modules imported by ``tests/``, ``benchmarks/`` or
+  ``examples/`` code in the scanned tree.
+
+**edges** — every static import (top-level or function-local, absolute or
+relative) from a reachable module marks its targets reachable; ``from
+repro.pkg import sub`` reaches both ``repro.pkg`` and ``repro.pkg.sub``.
+
+Anything in ``src/repro`` left unreached is flagged at line 1; a module
+that is deliberately import-only can carry the pragma on its first line.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.check.base import Finding, ParsedFile, dotted_name
+from repro.check.rules.registry_only import _registration_symbols
+
+_DOC_PATH_RE = re.compile(r"src/repro/[\w/]+\.py")
+
+
+def module_name(path: str) -> Optional[str]:
+    """``src/repro/a/b.py`` -> ``repro.a.b`` (``__init__`` -> the package);
+    None for files outside src/."""
+    if "src/repro/" not in "/" + path:
+        return None
+    rel = path.split("src/", 1)[-1][:-len(".py")]
+    parts = rel.split("/")
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _imports_of(pf: ParsedFile, mod: Optional[str]) -> Set[str]:
+    """Absolute dotted module names ``pf`` imports (incl. per-name targets
+    of from-imports, so ``from repro.a import b`` reaches ``repro.a.b``)."""
+    out: Set[str] = set()
+    for node in ast.walk(pf.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:                       # relative import
+                if mod is None:
+                    continue
+                anchor = mod.split(".")
+                # level 1 = current package: drop the module leaf, then
+                # one more segment per extra level (a package __init__'s
+                # dotted name IS its package, so one fewer drop)
+                drop = node.level - (1 if pf.path.endswith("__init__.py")
+                                     else 0)
+                anchor = anchor[:len(anchor) - drop] if drop else anchor
+                base = ".".join(anchor + ([base] if base else []))
+            if base:
+                out.add(base)
+                for alias in node.names:
+                    out.add(f"{base}.{alias.name}")
+    return out
+
+
+def _has_main_guard(tree: ast.Module) -> bool:
+    for node in tree.body:
+        if isinstance(node, ast.If):
+            t = node.test
+            if isinstance(t, ast.Compare) and \
+                    dotted_name(t.left) == "__name__":
+                return True
+    return False
+
+
+class DeadModuleRule:
+    rule_id = "no-dead-module"
+
+    def __init__(self, doc_texts: Iterable[str] = ()) -> None:
+        self.doc_paths: Set[str] = set()
+        for text in doc_texts:
+            self.doc_paths.update(_DOC_PATH_RE.findall(text))
+
+    def check_tree(self, files: Dict[str, ParsedFile]) -> List[Finding]:
+        mod_of: Dict[str, str] = {}              # module name -> path
+        for path, pf in files.items():
+            m = module_name(path)
+            if m:
+                mod_of[m] = path
+
+        roots: Set[str] = set()
+        ext_imports: Set[str] = set()
+        for path, pf in files.items():
+            m = module_name(path)
+            if m is None:
+                # tests/benchmarks/examples: whatever they import is used
+                ext_imports |= _imports_of(pf, None)
+                continue
+            if path.endswith("__main__.py") or _has_main_guard(pf.tree):
+                roots.add(m)
+            if _registration_symbols(pf.tree):
+                roots.add(m)
+            if path in self.doc_paths:
+                roots.add(m)
+        roots |= {m for m in ext_imports if m in mod_of}
+        # a from-import target may be an attr, not a module: keep only real
+        roots &= set(mod_of)
+
+        reachable: Set[str] = set()
+        frontier = sorted(roots)
+        while frontier:
+            m = frontier.pop()
+            if m in reachable:
+                continue
+            reachable.add(m)
+            pf = files[mod_of[m]]
+            for tgt in _imports_of(pf, m):
+                if tgt in mod_of and tgt not in reachable:
+                    frontier.append(tgt)
+            # a reachable module reaches its ancestor packages (importing
+            # repro.a.b executes repro and repro.a __init__s) and vice
+            # versa a package reaches nothing implicitly
+            parts = m.split(".")
+            for i in range(1, len(parts)):
+                anc = ".".join(parts[:i])
+                if anc in mod_of and anc not in reachable:
+                    frontier.append(anc)
+
+        out: List[Finding] = []
+        for m, path in sorted(mod_of.items()):
+            if m not in reachable:
+                out.append(Finding(
+                    self.rule_id, path, 1,
+                    f"module {m} unreachable from entry points, "
+                    f"registries, docs, or tests/benchmarks"))
+        return out

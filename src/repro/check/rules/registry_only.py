@@ -1,0 +1,109 @@
+"""registry-only-construction: build components by name, not by class.
+
+``repro.registry`` is the repo's single construction path: every pluggable
+component (compressor, prox, oracle, topology, schedule, fault, algorithm,
+problem, engine) registers a factory, and specs/CLIs/engines build strictly
+by name.  A direct ``QInf(...)`` call in some other module silently forks
+that path — it skips the registry's kwarg validation and stops tracking the
+factory when the component is re-registered (tests shadow components on
+purpose).
+
+Mechanics: a first pass over the tree collects every registered symbol —
+decorator form (``@register_compressor("qinf")`` above a class/def, also
+``@registry.register(...)`` / ``@register("kind", "name")``) and call form
+(``registry.register_topology("ring")(ring)``) — remembering the module
+that defines it.  The second pass flags any ``Sym(...)`` or ``mod.Sym(...)``
+call whose terminal name matches a registered symbol, outside the defining
+module.  Two carve-outs: ``tests/`` are out of scope (tests construct
+components directly to probe internals), and calls INSIDE a registered
+factory's own body are fine — a factory defaulting ``prox or NoneProx()``
+IS the registry's construction path, not a fork of it.  Remaining
+deliberate library exceptions carry a
+``# repro: allow(registry-only-construction)`` pragma.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.check.base import Finding, ParsedFile, dotted_name
+
+_REGISTER_PREFIX = "register"
+
+
+def _registration_symbols(tree: ast.Module) -> Set[str]:
+    """Class/function names this module registers with repro.registry."""
+    return _registrations(tree)[0]
+
+
+def _registrations(tree: ast.Module) -> Tuple[Set[str],
+                                              List[Tuple[int, int]]]:
+    """(registered class/function names, their body line spans)."""
+    syms: Set[str] = set()
+    call_form: Set[str] = set()
+    spans: List[Tuple[int, int]] = []
+    defs: Dict[str, Tuple[int, int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            span = (node.lineno, node.end_lineno or node.lineno)
+            defs.setdefault(node.name, span)
+            for dec in node.decorator_list:
+                # @register_compressor("qinf") / @registry.register(...)
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                name = dotted_name(target).rsplit(".", 1)[-1]
+                if name.startswith(_REGISTER_PREFIX):
+                    syms.add(node.name)
+                    spans.append(span)
+        elif isinstance(node, ast.Call):
+            # call form: registry.register_topology("ring")(ring)
+            f = node.func
+            if isinstance(f, ast.Call):
+                name = dotted_name(f.func).rsplit(".", 1)[-1]
+                if name.startswith(_REGISTER_PREFIX):
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name):
+                            syms.add(arg.id)
+                            call_form.add(arg.id)
+    spans.extend(defs[s] for s in call_form if s in defs)
+    return syms, spans
+
+
+def _in_scope(path: str) -> bool:
+    return not (path.startswith("tests/") or "/tests/" in path)
+
+
+class RegistryOnlyRule:
+    rule_id = "registry-only-construction"
+
+    def check_tree(self, files: Dict[str, ParsedFile]) -> List[Finding]:
+        defined_in: Dict[str, Set[str]] = {}       # symbol -> defining paths
+        factory_spans: Dict[str, List[Tuple[int, int]]] = {}
+        for path, pf in files.items():
+            syms, spans = _registrations(pf.tree)
+            factory_spans[path] = spans
+            for sym in syms:
+                defined_in.setdefault(sym, set()).add(path)
+        if not defined_in:
+            return []
+
+        out: List[Finding] = []
+        for path, pf in files.items():
+            if not _in_scope(path):
+                continue
+            spans = factory_spans.get(path, [])
+            for node in ast.walk(pf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                sym = dotted_name(node.func).rsplit(".", 1)[-1]
+                homes = defined_in.get(sym)
+                if not homes or path in homes:
+                    continue
+                if any(a <= node.lineno <= b for a, b in spans):
+                    continue               # inside a registered factory
+                out.append(Finding(
+                    self.rule_id, path, node.lineno,
+                    f"direct {sym}(...) — registered component; build "
+                    f"via repro.registry (defined in "
+                    f"{sorted(homes)[0]})"))
+        return out

@@ -1,0 +1,72 @@
+"""no-wallclock-in-library: clocks and unseeded RNG stay out of library code.
+
+The repro claims that matter — bit-for-bit sweep parity, exact wire
+accounting, deterministic replay from a spec — all die the moment library
+code reads a wallclock or an unseeded global RNG.  Timing belongs to the
+one shared helper (``repro.obs.trace.span``, which also fences async
+dispatch so the number means something) and to the driver layer; randomness
+flows from explicit seeds through ``jax.random`` keys or seeded
+``np.random.default_rng(seed)`` generators.
+
+Scope: ``src/repro/`` only, excluding ``launch/`` (drivers own their
+walltime) and ``obs/trace.py`` (the sanctioned helper).  ``benchmarks/``
+and ``tests/`` time things by design and are out of scope.
+
+Flagged:
+
+* ``time.time`` / ``perf_counter`` / ``monotonic`` (+``_ns``) calls;
+* ``datetime.now`` / ``utcnow`` / ``today`` calls;
+* any ``np.random.*`` global-state call, and ``np.random.default_rng()``
+  with no seed argument (seeded ``default_rng(seed)`` is fine).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.check.base import Finding, dotted_name
+
+_CLOCKS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+           "monotonic", "monotonic_ns", "process_time", "process_time_ns"}
+_DT = {"now", "utcnow", "today"}
+
+
+def _in_scope(path: str) -> bool:
+    if "src/repro/" not in "/" + path:
+        return False
+    rel = path.split("src/repro/", 1)[-1]
+    return not (rel.startswith("launch/") or rel == "obs/trace.py")
+
+
+class WallclockRule:
+    rule_id = "no-wallclock-in-library"
+
+    def check(self, path: str, tree: ast.AST, source: str) -> List[Finding]:
+        if not _in_scope(path):
+            return []
+        out: List[Finding] = []
+
+        def flag(node: ast.AST, what: str) -> None:
+            out.append(Finding(
+                self.rule_id, path, node.lineno,
+                f"{what} in library code — use obs.span / an explicit seed"))
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = dotted_name(node.func)
+            if not dotted:
+                continue
+            parts = dotted.split(".")
+            if parts[0] == "time" and len(parts) == 2 \
+                    and parts[1] in _CLOCKS:
+                flag(node, f"{dotted}()")
+            elif "datetime" in parts[:-1] and parts[-1] in _DT:
+                flag(node, f"{dotted}()")
+            elif parts[:2] in (["np", "random"], ["numpy", "random"]):
+                if parts[2:] == ["default_rng"]:
+                    if not node.args and not node.keywords:
+                        flag(node, f"unseeded {dotted}()")
+                elif len(parts) == 3:
+                    flag(node, f"global-state {dotted}()")
+        return out

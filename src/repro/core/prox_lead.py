@@ -111,12 +111,16 @@ class ProxLEAD:
 
 def lead(eta, alpha, gamma, compressor, mixer, oracle, **kw) -> ProxLEAD:
     """LEAD (Algorithm 3) == Prox-LEAD with R = 0."""
+    # the R = 0 reduction is definitional, not a pluggable choice
+    # repro: allow(registry-only-construction)
     return ProxLEAD(eta, alpha, gamma, compressor, NoneProx(), mixer, oracle, **kw)
 
 
 def nids(eta, mixer, oracle, prox: Optional[Prox] = None) -> ProxLEAD:
     """NIDS (Li-Shi-Yan 2019) == (Prox-)LEAD with C = 0, gamma = 1 (paper §4.3,
     Corollary 6 / the PUDA reduction)."""
+    # C = 0 / R-optional are the reduction itself, not pluggable choices
+    # repro: allow(registry-only-construction)
     return ProxLEAD(eta, 1.0, 1.0, Identity(), prox or NoneProx(), mixer, oracle)
 
 

@@ -1,5 +1,6 @@
-# Launch layer: production meshes, the multi-pod dry-run, roofline
-# extraction, and runnable train/serve drivers.
+# Launch layer: production meshes, the multi-pod dry-run, and runnable
+# train/serve drivers.  (Roofline/HLO accounting lives in repro.obs.roofline,
+# next to the report/gate code that consumes it.)
 # NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
 # dedicated process (tests use subprocesses).
-from repro.launch import mesh, roofline  # noqa: F401
+from repro.launch import mesh  # noqa: F401

@@ -34,7 +34,7 @@ from repro import compat  # noqa: E402
 from repro import configs  # noqa: E402
 from repro.configs import shapes as shp  # noqa: E402
 from repro.launch import mesh as mesh_mod  # noqa: E402
-from repro.launch import roofline  # noqa: E402
+from repro.obs import roofline  # noqa: E402
 from repro.models import transformer as TR  # noqa: E402
 from repro.models.sharding import node_axes, param_specs  # noqa: E402
 

@@ -11,7 +11,7 @@ env        :func:`repro.obs.meters.env_info` stamp (jax version, backend,
 timing     measured total + per-step wall clock (block_until_ready-
            correct), split compute-vs-wire: ``wire_model_s_per_step`` is
            the exact bits on the wire pushed through one
-           ``launch/roofline.py::LINK_BW`` link, ``compute_residual_s_per_
+           ``src/repro/obs/roofline.py::LINK_BW`` link, ``compute_residual_s_per_
            step`` is the measured remainder.  An analytic split, not a
            profile: it answers "at hardware link speed, what fraction of
            this step is communication?"
@@ -35,7 +35,7 @@ import json
 import pathlib
 from typing import Any, Dict, Optional
 
-from repro.launch.roofline import LINK_BW
+from repro.obs.roofline import LINK_BW
 from repro.obs.meters import Meters, env_info
 
 

@@ -1,5 +1,11 @@
 """Roofline-term extraction from compiled dry-run artifacts.
 
+(Home: ``repro.obs`` — this module started life as the seed's
+``launch/roofline.py`` and moved here when the observability layer grew
+around it; the HLO parsing feeds both the dry-run roofline and the
+``repro.check`` lowered-contract auditor, and the hardware constants feed
+``obs.report`` / ``obs.roofline_gate``.)
+
 Three terms per (arch, shape, mesh), all in seconds (per chip):
 
     compute    = FLOPs / peak_FLOP/s

@@ -1,6 +1,6 @@
 """Analytical rooflines for the fused wire kernels, from exact byte counts.
 
-``launch/roofline.py`` models the whole training step from HLO text and
+``obs/roofline.py`` models the whole training step from HLO text and
 napkin FLOP/HBM math.  This module models the *wire path* specifically —
 the fused ``qinf_quantize_pack`` / ``qinf_unpack_dequant_mix`` kernels and
 the collective-permutes between them — from the **exact** byte layout in
@@ -24,7 +24,7 @@ move through HBM even though they never ship):
   each (the exact bits :func:`repro.netsim.metrics.bucketed_payload_bits`
   counts, divided by the model-shard redundancy).
 
-Hardware constants come from ``launch/roofline.py`` (TPU v5e).  On the
+Hardware constants come from ``obs/roofline.py`` (TPU v5e).  On the
 CPU test backend measured times are far off the TPU roofline — the
 *ratios* and the byte equalities are the portable, gateable part.
 """
@@ -33,7 +33,7 @@ from __future__ import annotations
 from typing import Dict, Optional, Tuple
 
 from repro.core.bucket import BucketLayout
-from repro.launch.roofline import HBM_BW, LINK_BW
+from repro.obs.roofline import HBM_BW, LINK_BW
 
 
 def _elems(layout: BucketLayout) -> int:

@@ -138,6 +138,8 @@ class DecentralizedTrainer:
             "compressor", tcfg.compressor,
             {"bits": tcfg.bits, "block": tcfg.block, "frac": tcfg.frac})
         self.compressor: Compressor = make_compressor(tcfg.compressor, **kw)
+        # config default, not a by-name component: TrainerConfig carries a
+        # prox INSTANCE (or None)   # repro: allow(registry-only-construction)
         self.prox = tcfg.prox or NoneProx()
         self.plan: Optional[topo_mod.ExchangePlan] = None
         self.mixer = self._build_mixer()
@@ -200,6 +202,8 @@ class DecentralizedTrainer:
             return DenseMixer(self.topo.W)
         from repro.netsim import LinkDrop, SimMixer
         sched = self._schedule()
+        # drop_rate is a scalar TrainerConfig knob, not a FaultSpec list
+        # repro: allow(registry-only-construction)
         faults = (LinkDrop(tcfg.drop_rate),) if tcfg.drop_rate > 0 else ()
         return SimMixer(sched, faults, jax.random.key(tcfg.fault_seed))
 

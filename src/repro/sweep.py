@@ -75,7 +75,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -395,6 +394,8 @@ class SweepRunner:
             repl[name] = ops[f"param:{name}"]
         if self.plan.bits:
             c = self.base.compressor
+            # op-exact traced twin of the registered qinf, never user-built
+            # repro: allow(registry-only-construction)
             q = QInf(**registry.kwargs_subset("compressor", "qinf", c.params))
             repl["compressor"] = _TracedBitsQInf(
                 ops["levels"], q.block, q.use_pallas)
@@ -446,11 +447,11 @@ class SweepRunner:
             return self._dense_setup()[0]
         return self._netsim_setup()[0]
 
-    def step(self, state, keys):
-        """``vmap(point_step)``: one update of every grid point.  ``keys``
-        is a stacked (P,) key array (or a single key, split across
-        points).  Netsim points step through their SimMixer (schedule +
-        faults), exactly like ``run`` and the serial runner do."""
+    def point_step_fn(self):
+        """The jitted ``vmap(point_step)`` callable (built once, cached).
+        Exposed so tooling — notably the ``repro.check`` contract auditor —
+        can *lower* one grid step against abstract operands without ever
+        executing it; ``step`` drives the same object."""
         if self._step_fn is None:
             t = self._template
 
@@ -465,6 +466,11 @@ class SweepRunner:
 
             self._step_fn = jax.jit(
                 jax.vmap(point_step, in_axes=(0, 0, 0, 0)))
+        return self._step_fn
+
+    def step_args(self, state, keys):
+        """Concrete ``(ops, state, keys, fault_keys)`` operands for
+        :meth:`point_step_fn` — the exact tuple ``step`` passes."""
         if getattr(keys, "ndim", 1) == 0:
             keys = jax.random.split(keys, self.n_points)
         ops = {k: jnp.asarray(np.broadcast_to(v, (self.n_points,)))
@@ -472,7 +478,14 @@ class SweepRunner:
         ops["_idx"] = jnp.arange(self.n_points)     # ensure >= 1 mapped leaf
         fault_keys = jnp.stack([jax.random.key(p.fault_seed)
                                 for p in self.points])
-        return self._step_fn(ops, state, keys, fault_keys)
+        return ops, state, keys, fault_keys
+
+    def step(self, state, keys):
+        """``vmap(point_step)``: one update of every grid point.  ``keys``
+        is a stacked (P,) key array (or a single key, split across
+        points).  Netsim points step through their SimMixer (schedule +
+        faults), exactly like ``run`` and the serial runner do."""
+        return self.point_step_fn()(*self.step_args(state, keys))
 
     @property
     def metrics_fns(self):
@@ -511,65 +524,76 @@ class SweepRunner:
         # the cache entry holds the function objects themselves (not ids):
         # a GC'd lambda's id can be recycled and would alias a stale trace
         cache_key = (self.engine, num_steps, metric_fn, objective_fn)
-        t0 = time.time()
-        if self.engine == "dense":
-            state0, keys = self._dense_setup()
+        # walltime through the shared obs span (the only sanctioned clock in
+        # library code): ready() fences async dispatch before the span closes,
+        # and `time/run_total_s` lands in the meters like every other engine
+        meters = obs.Meters()
+        with obs.using_meters(meters), obs.span("run_total", meters) as tsp:
+            if self.engine == "dense":
+                state0, keys = self._dense_setup()
 
-            def point_run(args):
-                self.traces += 1
-                state, key, ops = args
-                algo = self._bind_algo(ops)
+                def point_run(args):
+                    self.traces += 1
+                    state, key, ops = args
+                    algo = self._bind_algo(ops)
 
-                def body(carry, _):
-                    state, key = carry
-                    key, sub = jax.random.split(key)
-                    state = algo.step(state, sub)
-                    rec = metric_fn(state) if metric_fn is not None else ()
-                    return (state, key), rec
+                    def body(carry, _):
+                        state, key = carry
+                        key, sub = jax.random.split(key)
+                        state = algo.step(state, sub)
+                        rec = (metric_fn(state) if metric_fn is not None
+                               else ())
+                        return (state, key), rec
 
-                (state, _), recs = jax.lax.scan(body, (state, key), None,
-                                                length=num_steps)
-                return state, recs
+                    (state, _), recs = jax.lax.scan(body, (state, key),
+                                                    None, length=num_steps)
+                    return state, recs
 
-            final, recs = self._grid_call(
-                cache_key, point_run, (state0, keys, self._ops_stacked()))
-            final = jax.block_until_ready(final)
-            metrics = ({"metric": np.asarray(recs, np.float64)}
-                       if metric_fn is not None else {})
-        else:
-            state0, step_keys = self._netsim_setup()
-            if num_steps != self.base.steps:
-                raise ValueError(
-                    f"netsim sweep: steps is part of the precomputed key "
-                    f"schedule; set base.steps (= {self.base.steps}) "
-                    f"instead of num_steps={num_steps}")
-            t = self._template
-            # per-point payload accounting from the REAL per-point
-            # compressors (the traced twin never computes payload bits);
-            # the counts are exact small integers, so the f32 operand
-            # reproduces the serial python-int arithmetic exactly
-            bpe = jnp.asarray([netsim_metrics.payload_bits_per_node(
-                p.compressor.build(), t.X0) for p in self.points],
-                np.float32)
-            fault_keys = jnp.stack([jax.random.key(p.fault_seed)
-                                    for p in self.points])
+                final, recs = self._grid_call(
+                    cache_key, point_run,
+                    (state0, keys, self._ops_stacked()))
+                final = tsp.ready(final)
+                metrics = ({"metric": np.asarray(recs, np.float64)}
+                           if metric_fn is not None else {})
+            else:
+                state0, step_keys = self._netsim_setup()
+                if num_steps != self.base.steps:
+                    raise ValueError(
+                        f"netsim sweep: steps is part of the precomputed "
+                        f"key schedule; set base.steps (= "
+                        f"{self.base.steps}) instead of "
+                        f"num_steps={num_steps}")
+                t = self._template
+                # per-point payload accounting from the REAL per-point
+                # compressors (the traced twin never computes payload bits);
+                # the counts are exact small integers, so the f32 operand
+                # reproduces the serial python-int arithmetic exactly
+                bpe = jnp.asarray([netsim_metrics.payload_bits_per_node(
+                    p.compressor.build(), t.X0) for p in self.points],
+                    np.float32)
+                fault_keys = jnp.stack([jax.random.key(p.fault_seed)
+                                        for p in self.points])
 
-            def point_run(args):
-                self.traces += 1
-                state, keys, fkey, bits_per_edge, ops = args
-                mixer = netsim_engine.SimMixer(t.schedule, t.faults, fkey)
-                algo = dataclasses.replace(self._bind_algo(ops), mixer=mixer)
-                body = netsim_engine.make_scan_body(
-                    algo, mixer, t.schedule, objective_fn=objective_fn,
-                    bits_per_edge=bits_per_edge)
-                return jax.lax.scan(body, state, keys)
+                def point_run(args):
+                    self.traces += 1
+                    state, keys, fkey, bits_per_edge, ops = args
+                    mixer = netsim_engine.SimMixer(t.schedule, t.faults,
+                                                   fkey)
+                    algo = dataclasses.replace(self._bind_algo(ops),
+                                               mixer=mixer)
+                    body = netsim_engine.make_scan_body(
+                        algo, mixer, t.schedule, objective_fn=objective_fn,
+                        bits_per_edge=bits_per_edge)
+                    return jax.lax.scan(body, state, keys)
 
-            final, recs = self._grid_call(
-                cache_key, point_run,
-                (state0, step_keys, fault_keys, bpe, self._ops_stacked()))
-            final = jax.block_until_ready(final)
-            metrics = {k: np.asarray(v, np.float64) for k, v in recs.items()}
-        wall = time.time() - t0
+                final, recs = self._grid_call(
+                    cache_key, point_run,
+                    (state0, step_keys, fault_keys, bpe,
+                     self._ops_stacked()))
+                final = tsp.ready(final)
+                metrics = {k: np.asarray(v, np.float64)
+                           for k, v in recs.items()}
+        wall = tsp.elapsed_s
         sched = (self._template.schedule if self.engine == "netsim" else None)
         result = SweepResult(
             [p.name for p in self.points], metrics, wall, self.traces,
@@ -578,7 +602,6 @@ class SweepRunner:
                   if sched is not None else {}))
         # grid-level telemetry: netsim sweeps carry the exact per-point bit
         # trajectories, so bits_total sums the whole grid's wire traffic
-        meters = obs.Meters()
         meters.set("sweep/points", self.n_points)
         meters.set("sweep/traces", self.traces)
         bits_total = (float(metrics["bits"].sum())

@@ -1,0 +1,432 @@
+"""repro.check tests: every lint rule on positive/negative snippets,
+pragma + baseline ratchet semantics, contract audits on synthetic HLO
+fixtures, and the full golden-spec contract audit (one subprocess, both
+trainer mesh shapes) — the injected-violation counterpart of the clean
+``make check`` the committed tree must pass.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.check import contracts
+from repro.check.base import Finding, pragma_lines
+from repro.check.lint import (counts_of, gate, run_lint, shrink_baseline)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tree(tmp_path, files):
+    """Materialize {relpath: source} under tmp_path and lint it."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_lint(tmp_path)
+
+
+def _rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# A registering module + a main-guard entry importing it: keeps the
+# no-dead-module rule quiet so rule tests see only their own findings.
+_CORE = """
+    from repro.registry import register_compressor
+
+    @register_compressor("q")
+    class Q:
+        def __init__(self, bits=2):
+            self.bits = bits
+"""
+_MAIN = """
+    from repro.core import comp
+
+    if __name__ == "__main__":
+        print(comp)
+"""
+_BASE = {"src/repro/core/comp.py": _CORE, "src/repro/cli.py": _MAIN}
+
+
+class TestCompatOnly:
+    def test_direct_shard_map_flagged(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/cli.py": _MAIN + """
+    import jax
+
+    def f(mesh, fn):
+        return jax.shard_map(fn, mesh=mesh)
+"""})
+        assert any(f.rule == "compat-only" and "jax.shard_map" in f.message
+                   for f in fs), fs
+
+    def test_experimental_import_flagged(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/cli.py": _MAIN + """
+    from jax.experimental import mesh_utils
+"""})
+        assert any(f.rule == "compat-only" for f in fs), fs
+
+    def test_pallas_allowed_in_kernels_only(self, tmp_path):
+        files = {**_BASE,
+                 "src/repro/kernels/quant.py": """
+    from jax.experimental import pallas as pl
+""",
+                 "src/repro/cli.py": _MAIN + """
+    from jax.experimental import pallas as pl
+"""}
+        fs = [f for f in _tree(tmp_path, files) if f.rule == "compat-only"]
+        assert len(fs) == 1 and fs[0].path == "src/repro/cli.py", fs
+
+    def test_compat_module_exempt(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/compat.py": """
+    import jax
+    from jax.experimental.shard_map import shard_map
+
+    def make_mesh(shape, names):
+        return jax.make_mesh(shape, names)
+"""})
+        assert not [f for f in fs if f.rule == "compat-only"], fs
+
+    def test_compat_routed_call_clean(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/cli.py": _MAIN + """
+    from repro import compat
+
+    def f():
+        return compat.make_mesh((8, 1), ("data", "model"))
+"""})
+        assert not [f for f in fs if f.rule == "compat-only"], fs
+
+
+class TestWallclock:
+    def _lint_lib(self, tmp_path, body):
+        return [f for f in _tree(tmp_path, {
+            **_BASE, "src/repro/lib.py": body,
+            "src/repro/cli.py": _MAIN + "    from repro import lib\n"})
+            if f.rule == "no-wallclock-in-library"]
+
+    def test_time_time_flagged(self, tmp_path):
+        fs = self._lint_lib(tmp_path, """
+    import time
+
+    def f():
+        return time.time()
+""")
+        assert len(fs) == 1 and "time.time()" in fs[0].message, fs
+
+    def test_perf_counter_flagged(self, tmp_path):
+        assert self._lint_lib(tmp_path, """
+    import time
+
+    def f():
+        return time.perf_counter()
+""")
+
+    def test_unseeded_default_rng_flagged_seeded_ok(self, tmp_path):
+        fs = self._lint_lib(tmp_path, """
+    import numpy as np
+
+    def bad():
+        return np.random.default_rng()
+
+    def good(seed):
+        return np.random.default_rng(seed)
+
+    def also_bad():
+        return np.random.normal()
+""")
+        assert len(fs) == 2, fs
+
+    def test_launch_and_benchmarks_out_of_scope(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE,
+                              "src/repro/launch/drv.py": """
+    import time
+
+    if __name__ == "__main__":
+        print(time.time())
+""",
+                              "benchmarks/b.py": """
+    import time
+
+    if __name__ == "__main__":
+        print(time.time())
+"""})
+        assert not [f for f in fs if f.rule == "no-wallclock-in-library"], fs
+
+
+class TestRegistryOnly:
+    def test_direct_construction_flagged(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/cli.py": _MAIN + """
+    from repro.core.comp import Q
+
+    def build():
+        return Q(bits=4)
+"""})
+        fs = [f for f in fs if f.rule == "registry-only-construction"]
+        assert len(fs) == 1 and "Q(...)" in fs[0].message, fs
+
+    def test_defining_module_and_tests_exempt(self, tmp_path):
+        fs = _tree(tmp_path, {
+            **_BASE,
+            "src/repro/core/comp.py": _CORE + """
+    DEFAULT = Q()
+""",
+            "tests/test_q.py": """
+    from repro.core.comp import Q
+
+    def test_q():
+        assert Q(bits=8).bits == 8
+"""})
+        assert not [f for f in fs if f.rule == "registry-only-construction"]
+
+    def test_registered_factory_body_exempt(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/algos.py": """
+    from repro.registry import register_algorithm
+    from repro.core.comp import Q
+
+    @register_algorithm("a")
+    def _a_factory(eta, compressor=None):
+        return (eta, compressor or Q())
+""", "src/repro/cli.py": _MAIN + "    from repro import algos\n"})
+        assert not [f for f in fs if f.rule == "registry-only-construction"]
+
+    def test_call_form_registration_detected(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/topo.py": """
+    from repro import registry
+
+    def ring(n):
+        return list(range(n))
+
+    registry.register_topology("ring")(ring)
+""", "src/repro/cli.py": _MAIN + """
+    from repro.topo import ring
+
+    def f():
+        return ring(4)
+"""})
+        fs = [f for f in fs if f.rule == "registry-only-construction"]
+        assert len(fs) == 1 and fs[0].path == "src/repro/cli.py", fs
+
+
+class TestDeadModule:
+    def test_orphan_flagged(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/orphan.py": """
+    X = 1
+"""})
+        fs = [f for f in fs if f.rule == "no-dead-module"]
+        assert len(fs) == 1 and fs[0].path == "src/repro/orphan.py", fs
+
+    def test_reachable_through_chain_and_docs(self, tmp_path):
+        (tmp_path / "docs").mkdir()
+        (tmp_path / "docs" / "A.md").write_text(
+            "see src/repro/documented.py for details\n")
+        fs = _tree(tmp_path, {
+            **_BASE,
+            # cli (main guard) -> core.comp (registry) -> helper: reachable
+            "src/repro/core/comp.py": _CORE + """
+    from repro import helper
+""",
+            "src/repro/helper.py": "Y = 2\n",
+            "src/repro/documented.py": "Z = 3\n"})
+        assert not [f for f in fs if f.rule == "no-dead-module"], fs
+
+    def test_test_import_reaches(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE,
+                              "src/repro/probe.py": "P = 1\n",
+                              "tests/test_p.py": """
+    from repro import probe
+
+    def test_p():
+        assert probe.P == 1
+"""})
+        assert not [f for f in fs if f.rule == "no-dead-module"], fs
+
+
+class TestPragmas:
+    def test_same_line_pragma_suppresses(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/cli.py": _MAIN + """
+    from repro.core.comp import Q
+
+    def build():
+        return Q()  # repro: allow(registry-only-construction)
+"""})
+        assert not [f for f in fs if f.rule == "registry-only-construction"]
+
+    def test_next_line_comment_pragma_suppresses(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/cli.py": _MAIN + """
+    from repro.core.comp import Q
+
+    def build():
+        # repro: allow(registry-only-construction)
+        return Q()
+"""})
+        assert not [f for f in fs if f.rule == "registry-only-construction"]
+
+    def test_wrong_rule_pragma_does_not_suppress(self, tmp_path):
+        fs = _tree(tmp_path, {**_BASE, "src/repro/cli.py": _MAIN + """
+    from repro.core.comp import Q
+
+    def build():
+        return Q()  # repro: allow(compat-only)
+"""})
+        assert [f for f in fs if f.rule == "registry-only-construction"]
+
+    def test_pragma_parse(self):
+        src = "x = 1  # repro: allow(a, b)\n# repro: allow(c)\ny = 2\n"
+        lines = pragma_lines(src)
+        assert lines[1] == {"a", "b"}
+        assert lines[2] == {"c"} and lines[3] == {"c"}
+
+
+class TestBaselineRatchet:
+    F = [Finding("r", "a.py", i, "m") for i in (1, 2, 3)]
+
+    def test_gate_within_baseline_passes(self):
+        gates, offenders = gate(self.F, {"r:a.py": 3})
+        assert all(ok for _, ok, _ in gates) and not offenders
+
+    def test_gate_over_baseline_fails_with_offenders(self):
+        gates, offenders = gate(self.F, {"r:a.py": 2})
+        assert any(not ok for _, ok, _ in gates)
+        assert len(offenders) == 1 and offenders[0].line == 3
+
+    def test_gate_new_bucket_fails(self):
+        gates, offenders = gate(self.F, {})
+        assert any(not ok for _, ok, _ in gates) and len(offenders) == 3
+
+    def test_shrink_only(self):
+        new, refused = shrink_baseline({"r:a.py": 5}, self.F)
+        assert new == {"r:a.py": 3} and not refused
+
+    def test_refuses_growth_and_new_keys(self):
+        new, refused = shrink_baseline({"r:a.py": 1}, self.F)
+        assert refused == ["r:a.py"] and new == {"r:a.py": 1}
+        new, refused = shrink_baseline({}, self.F)
+        assert refused == ["r:a.py"] and new == {}
+
+    def test_fixed_bucket_retired(self):
+        new, refused = shrink_baseline({"r:a.py": 3, "r:b.py": 2}, self.F)
+        assert new == {"r:a.py": 3} and not refused
+
+    def test_counts(self):
+        assert counts_of(self.F) == {"r:a.py": 3}
+
+
+# --- contract audits on synthetic HLO fixtures -----------------------------
+
+def _hlo(*ops):
+    return "ENTRY %main () -> f32[] {\n" + "\n".join(ops) + "\n}\n"
+
+
+CP_U8 = '  %cp{i} = u8[{n}]{{0}} collective-permute(%x{i}), ' \
+        'source_target_pairs={{{{0,1}}}}'
+
+
+def _u8_cps(count, nbytes):
+    return [CP_U8.format(i=i, n=nbytes) for i in range(count)]
+
+
+class TestWireAudit:
+    def test_clean_wire_passes(self):
+        hlo = _hlo(*_u8_cps(2, 100))
+        out = contracts.audit_wire_hlo(hlo, hops=1, per_edge_bits=1600)
+        assert all(ok for _, ok, _ in out), out
+
+    def test_non_u8_collective_fails(self):
+        hlo = _hlo(*_u8_cps(2, 100),
+                   '  %bad = f32[25]{0} collective-permute(%y), '
+                   'source_target_pairs={{0,1}}')
+        out = contracts.audit_wire_hlo(hlo, hops=1, per_edge_bits=1600)
+        bad = [c for c, ok, _ in out if not ok]
+        assert any("u8" in c for c in bad), out
+
+    def test_wrong_collective_count_fails(self):
+        hlo = _hlo(*_u8_cps(3, 100))          # 3 != 2 x 1 hop
+        out = contracts.audit_wire_hlo(hlo, hops=1, per_edge_bits=1600)
+        assert any("2 x hops" in c for c, ok, _ in out if not ok), out
+
+    def test_byte_volume_mismatch_fails(self):
+        hlo = _hlo(*_u8_cps(2, 99))           # 198B != 1600b/8 = 200B
+        out = contracts.audit_wire_hlo(hlo, hops=1, per_edge_bits=1600)
+        assert any("bytes" in c for c, ok, _ in out if not ok), out
+
+    def test_model_sharded_mesh_tolerates_dominated_reshards(self):
+        hlo = _hlo(*_u8_cps(2, 100),
+                   '  %rs = bf16[8]{0} collective-permute(%y), '
+                   'source_target_pairs={{0,1}}')
+        out = contracts.audit_wire_hlo(hlo, hops=1, per_edge_bits=3200,
+                                       model_shards=2)
+        assert all(ok for _, ok, _ in out), out
+
+    def test_f64_flagged(self):
+        assert not contracts.audit_no_f64(
+            _hlo('  %d = f64[8]{0} add(%a, %b)'))[0][1]
+        assert contracts.audit_no_f64(_hlo(*_u8_cps(2, 10)))[0][1]
+
+    def test_host_callback_flagged(self):
+        hlo = _hlo('  %c = f32[] custom-call(%t), '
+                   'custom_call_target="xla_python_cpu_callback"')
+        assert not contracts.audit_no_host_callbacks(hlo)[0][1]
+        assert contracts.audit_no_host_callbacks(_hlo(*_u8_cps(2, 4)))[0][1]
+
+
+# --- the committed tree + golden specs -------------------------------------
+
+SPEC_STEMS = sorted(
+    p.stem for p in (pathlib.Path(REPO) / "tests"
+                     / "golden_specs").glob("*.json"))
+
+
+class TestCommittedTree:
+    def test_lint_gate_green_on_repo(self):
+        """The committed tree passes its own lint gate (ratchet baseline)."""
+        root = pathlib.Path(REPO)
+        findings = run_lint(root)
+        baseline = json.loads(
+            (root / "tools" / "lint_baseline.json").read_text())
+        gates, offenders = gate(findings, baseline)
+        assert not offenders, [str(f) for f in offenders]
+        assert all(ok for _, ok, _ in gates), gates
+
+
+@pytest.mark.slow
+class TestGoldenSpecContracts:
+    """One fresh 8-device subprocess audits every golden spec (trainer
+    specs on both (8,1) and (4,2) meshes); the parametrized test then
+    asserts each spec's findings individually."""
+
+    _cache = {}
+
+    @classmethod
+    def _findings(cls):
+        if "f" not in cls._cache:
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            env["PYTHONPATH"] = os.path.join(REPO, "src")
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.check", "--contracts-sub",
+                 "--root", REPO,
+                 "--specs", os.path.join(REPO, "tests", "golden_specs")],
+                capture_output=True, text=True, env=env, timeout=560)
+            mark = "CHECK_CONTRACTS_JSON:"
+            line = [ln for ln in r.stdout.splitlines()
+                    if ln.startswith(mark)]
+            assert line, r.stdout + r.stderr[-2000:]
+            cls._cache["f"] = json.loads(line[0][len(mark):])
+        return cls._cache["f"]
+
+    @pytest.mark.parametrize("stem", SPEC_STEMS)
+    def test_spec_contracts_hold(self, stem):
+        name = stem.replace("_", "-")
+        mine = [f for f in self._findings()
+                if f[0].startswith((stem, name))]
+        assert mine, f"no contract findings for {stem}"
+        bad = [f for f in mine if not f[1]]
+        assert not bad, bad
+
+    def test_trainer_specs_audited_on_both_meshes(self):
+        claims = [f[0] for f in self._findings()]
+        for shape in ("8x1", "4x2"):
+            assert any(f"@{shape}" in c for c in claims), (shape, claims)

@@ -13,7 +13,7 @@ import textwrap
 
 import pytest
 
-from repro.launch import roofline
+from repro.obs import roofline
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -189,7 +189,7 @@ class TestSmallMeshLowering:
         # few small resharding collective-permutes of its own (present in
         # the dense lowering too), so assert u8 payload bytes dominate.
         import re
-        from repro.launch import roofline
+        from repro.obs import roofline
         cps = [m.group(1) for m in
                re.finditer(r'=\\s*((?:\\([^)]*\\))|(?:[\\w\\[\\],.{}]+))\\s+'
                            r'collective-permute(?:-start)?\\(',
@@ -404,7 +404,7 @@ class TestNeighborBackend:
         from repro import compat, configs
         from repro.configs import shapes as shp
         from repro.optim import DecentralizedTrainer, TrainerConfig
-        from repro.launch import roofline
+        from repro.obs import roofline
         from repro.netsim import metrics as nmetrics
 
         cfg = configs.get("qwen3-1.7b").reduced(n_layers=1, d_model=64)
@@ -463,7 +463,7 @@ class TestNeighborBackend:
         from repro import compat, configs
         from repro.configs import shapes as shp
         from repro.optim import DecentralizedTrainer, TrainerConfig
-        from repro.launch import roofline
+        from repro.obs import roofline
         from repro.netsim import metrics as nmetrics
 
         mesh = compat.make_mesh((8, 1), ("data", "model"))
@@ -524,7 +524,7 @@ class TestKernelRooflineGate:
         from repro import api, compat, configs, obs
         from repro.configs import shapes as shp
         from repro.optim import DecentralizedTrainer, TrainerConfig
-        from repro.launch import roofline
+        from repro.obs import roofline
         from repro.netsim import metrics as nmetrics
         from repro.models.sharding import model_axis_size
 

@@ -18,7 +18,7 @@ import pytest
 
 from repro import api, obs
 from repro.core import bucket
-from repro.launch.roofline import HBM_BW, LINK_BW
+from repro.obs.roofline import HBM_BW, LINK_BW
 from repro.netsim import metrics as nmetrics
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
